@@ -1,0 +1,191 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Paper: Xiong, Yu, Hamdi, Hou, "A Prudent-Precedence Concurrency Control
+Protocol for High Data Contention Database Environments" (IJDMS 2016).
+
+* ``fig5`` .. ``fig16``: throughput-vs-MPL curves for PPCC / 2PL / OCC
+  under the paper's parameter grid (Table 1), reporting peak throughput
+  and the PPCC improvement over 2PL / OCC next to the paper's numbers.
+* ``sched_admit``: PPCC batch-scheduler admission throughput (tensorised
+  protocol, jit).
+* ``kernel_*``: Pallas kernel wall time in interpret mode (correctness
+  path; TPU perf comes from the §Roofline dry-run numbers, not CPU
+  wall-time).
+
+Output: ``name,us_per_call,derived`` CSV per line.
+
+Default horizon is 20k time units for CI speed; ``--full`` runs the
+paper's 100k horizon (matches EXPERIMENTS.md §Repro numbers).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.pysim import simulate  # noqa: E402
+from repro.core.types import (PAPER_PEAKS, SimParams,  # noqa: E402
+                              paper_figure_params)
+
+MPL_GRID = (5, 10, 25, 50, 75, 100, 150)
+HORIZON = 20_000.0
+SEEDS = (0,)
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def run_figure(fig: int, horizon: float, seeds=SEEDS, mpl_grid=MPL_GRID):
+    base = paper_figure_params(fig)
+    peaks = {}
+    curves = {}
+    wall = {}
+    for proto in ("ppcc", "2pl", "occ"):
+        t0 = time.time()
+        curve = []
+        for mpl in mpl_grid:
+            commits = 0
+            for seed in seeds:
+                p = base.with_(mpl=mpl, horizon=horizon, seed=seed)
+                commits += simulate(p, proto).commits
+            curve.append(commits / len(seeds))
+        curves[proto] = curve
+        peaks[proto] = max(curve)
+        wall[proto] = (time.time() - t0) * 1e6
+    imp_2pl = 100.0 * (peaks["ppcc"] - peaks["2pl"]) / max(peaks["2pl"], 1)
+    imp_occ = 100.0 * (peaks["ppcc"] - peaks["occ"]) / max(peaks["occ"], 1)
+    ref = PAPER_PEAKS[fig]
+    scale = horizon / 100_000.0
+    for proto in ("ppcc", "2pl", "occ"):
+        ref_peak = dict(zip(("ppcc", "2pl", "occ"), ref))[proto]
+        _row(f"fig{fig}_{proto}_peak", wall[proto],
+             f"peak={peaks[proto]:.0f} paper={ref_peak}"
+             f" paper_scaled={ref_peak * scale:.0f}")
+    _row(f"fig{fig}_improvement", sum(wall.values()),
+         f"ppcc_vs_2pl={imp_2pl:+.1f}% ppcc_vs_occ={imp_occ:+.1f}%")
+    return peaks, curves
+
+
+def make_fig_fn(fig: int):
+    def f(args):
+        horizon = 100_000.0 if args.full else HORIZON
+        seeds = (0, 1, 2) if args.full else SEEDS
+        run_figure(fig, horizon, seeds=seeds)
+    f.__name__ = f"fig{fig}"
+    return f
+
+
+FIGS = {f"fig{i}": make_fig_fn(i) for i in range(5, 17)}
+
+
+def sched_admit(args):
+    """Tensorised PPCC batch admission throughput (jit, CPU)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ppcc
+
+    n, d, m = 256, 1024, 512
+    rng = np.random.default_rng(0)
+    txn = jnp.array(rng.integers(0, n, m), jnp.int32)
+    item = jnp.array(rng.integers(0, d, m), jnp.int32)
+    wr = jnp.array(rng.random(m) < 0.3)
+    valid = jnp.ones(m, bool)
+    s = ppcc.init_state(n, d)
+    for i in range(n):
+        s = ppcc.begin(s, jnp.int32(i))
+    admit = jax.jit(ppcc.admit_ops)
+    out = admit(s, txn, item, wr, valid)          # compile
+    jax.block_until_ready(out.admitted)
+    t0 = time.time()
+    iters = 20
+    for _ in range(iters):
+        out = admit(s, txn, item, wr, valid)
+    jax.block_until_ready(out.admitted)
+    us = (time.time() - t0) / iters * 1e6
+    admitted = int(out.admitted.sum())
+    _row("sched_admit_512ops", us,
+         f"admitted={admitted}/512 ops_per_s={512 / (us / 1e6):.0f}")
+
+
+def kernel_flash(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    q = jnp.ones((1, 4, 512, 128), jnp.bfloat16)
+    k = jnp.ones((1, 2, 512, 128), jnp.bfloat16)
+    v = jnp.ones((1, 2, 512, 128), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v)            # compile (interpret)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    out = ops.flash_attention(q, k, v)
+    jax.block_until_ready(out)
+    us = (time.time() - t0) * 1e6
+    flops = 4 * 4 * 512 * 512 * 128 / 2
+    _row("kernel_flash_interpret", us,
+         f"flops={flops:.2e} note=interpret-mode-correctness-path")
+
+
+def kernel_conflict(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    rb = jax.random.bits(key, (512, 128), jnp.uint32)
+    wb = jax.random.bits(key, (512, 128), jnp.uint32)
+    out = ops.conflict_matrix(rb, wb)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    out = ops.conflict_matrix(rb, wb)
+    jax.block_until_ready(out)
+    us = (time.time() - t0) * 1e6
+    _row("kernel_conflict_interpret", us,
+         f"pairs={512 * 512} note=interpret-mode-correctness-path")
+
+
+def jaxsim_parity(args):
+    """Tensorised JAX simulator vs the event-heap oracle."""
+    try:
+        from repro.core import jaxsim
+    except ImportError:
+        _row("jaxsim_parity", 0.0, "skipped=module-not-available")
+        return
+    p = SimParams(db_size=100, txn_size_mean=8, write_prob=0.2, mpl=16,
+                  horizon=5_000.0, seed=0)
+    t0 = time.time()
+    jres = jaxsim.simulate(p, "ppcc")
+    us = (time.time() - t0) * 1e6
+    pres = simulate(p, "ppcc")
+    _row("jaxsim_parity", us,
+         f"jax_commits={jres.commits} pysim_commits={pres.commits}")
+
+
+BENCHES = dict(FIGS)
+BENCHES.update(
+    sched_admit=sched_admit,
+    kernel_flash=kernel_flash,
+    kernel_conflict=kernel_conflict,
+    jaxsim_parity=jaxsim_parity,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 100k-time-unit simulations")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(BENCHES))
+    print("name,us_per_call,derived")
+    for name in names:
+        BENCHES[name](args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,509 @@
+"""Tensorised, event-synchronous discrete-event simulator in JAX.
+
+The event-heap oracle (``pysim``) is a pointer-chasing CPU artifact; this
+module is the TPU-native reformulation (DESIGN.md §2): the entire
+simulator state is a fixed-shape pytree and one ``lax.while_loop``
+iteration processes exactly one event — the transaction with the minimum
+next-event time — via masked tensor updates and a ``lax.switch`` over
+event kinds.  FCFS multi-server resource pools become ``free_at``
+vectors: a request reserves ``argmin(free_at)`` at request time, which
+reproduces FCFS because events are processed in time order.
+
+All three protocols run on the same tensor state:
+
+* ``ppcc`` — the paper's protocol via ``repro.core.ppcc`` primitives,
+* ``2pl`` — strict 2PL (read/write sets double as S/X lock tables),
+* ``occ``  — backward validation via a per-transaction ``dirty`` bitmap
+  (write sets of transactions that committed during the reader's
+  lifetime), re-checked at flush end to close the K-R overlap window.
+
+``vmap`` over (seed, write_prob, mpl, block_timeout) turns a parameter
+sweep into one SPMD computation; ``examples/ppcc_sweep.py`` shards such
+a sweep over the production mesh's data axis.
+
+Semantics are validated statistically against the oracle in
+``tests/test_jaxsim_vs_pysim.py`` (same model, different tie-breaking).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ppcc as P
+from .types import SimParams, SimResult
+
+INF = jnp.float32(1e30)
+
+# event kinds
+EV_ATTEMPT, EV_DISK_DONE, EV_FLUSH_DONE, EV_TIMEOUT, EV_RESTART = range(5)
+# phases
+PH_READ, PH_BLOCKED, PH_WC_LOCK, PH_WC_PREC, PH_FLUSH, PH_RESTART, PH_OFF \
+    = range(7)
+
+
+class EngState(NamedTuple):
+    now: jax.Array               # f32 scalar
+    key: jax.Array               # PRNG
+    pstate: P.PPCCState          # protocol tensor state
+    dirty: jax.Array             # bool[N, D]   (OCC validation bitmap)
+    kinds: jax.Array             # int8[N, L]  op kinds (-1 pad)
+    items: jax.Array             # int32[N, L]
+    op_idx: jax.Array            # int32[N]
+    phase: jax.Array             # int8[N]
+    next_time: jax.Array         # f32[N]
+    next_kind: jax.Array         # int8[N]
+    deadline: jax.Array          # f32[N] block timeout deadline
+    flush_left: jax.Array        # int32[N]
+    cpu_free: jax.Array          # f32[C]
+    disk_free: jax.Array         # f32[K]
+    commits: jax.Array           # int32
+    aborts: jax.Array
+    blocks: jax.Array
+    ops_done: jax.Array
+    iters: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngCfg:
+    protocol: str
+    n: int                       # MPL slots
+    d: int                       # db size
+    max_ops: int
+    cpus: int
+    disks: int
+    cpu_mean: float
+    cpu_spread: float
+    io_mean: float
+    io_spread: float
+    write_prob: float
+    len_lo: int
+    len_hi: int
+    block_timeout: float
+    restart_mean: float
+    horizon: float
+    max_iters: int
+
+
+def _cfg(p: SimParams, max_iters: int) -> EngCfg:
+    return EngCfg(
+        protocol="", n=p.mpl, d=p.db_size, max_ops=p.txn_size_mean
+        + p.txn_size_spread, cpus=p.num_cpus, disks=p.num_disks,
+        cpu_mean=p.cpu_burst_mean, cpu_spread=p.cpu_burst_spread,
+        io_mean=p.io_time_mean, io_spread=p.io_time_spread,
+        write_prob=p.write_prob,
+        len_lo=max(2, p.txn_size_mean - p.txn_size_spread),
+        len_hi=p.txn_size_mean + p.txn_size_spread,
+        block_timeout=p.block_timeout, restart_mean=p.restart_delay_mean,
+        horizon=p.horizon, max_iters=max_iters)
+
+
+# --------------------------------------------------------------------------
+# workload sampling (in-kernel)
+# --------------------------------------------------------------------------
+
+def sample_txn(key: jax.Array, cfg: EngCfg) -> Tuple[jax.Array, jax.Array]:
+    """One transaction: (kinds int8[L], items int32[L]); -1 pads."""
+    kl, kw, ki = jax.random.split(key, 3)
+    length = jax.random.randint(kl, (), cfg.len_lo, cfg.len_hi + 1)
+    want_w = jax.random.uniform(kw, (cfg.max_ops,)) < cfg.write_prob
+    keys = jax.random.split(ki, cfg.max_ops)
+
+    def slot(carry, inp):
+        read_items, n_read, written = carry
+        j, kk, ww = inp
+        k1, k2 = jax.random.split(kk)
+        avail = (jnp.arange(cfg.max_ops) < n_read) & ~written
+        n_avail = avail.sum()
+        do_write = ww & (n_avail > 0)
+        # pick a random available read slot (guard all-masked case)
+        logits = jnp.where(avail | (n_avail == 0), 0.0, -jnp.inf)
+        wpick = jax.random.categorical(k1, logits)
+        item_w = read_items[wpick]
+        item_r = jax.random.randint(k2, (), 0, cfg.d)
+        item = jnp.where(do_write, item_w, item_r)
+        kind = jnp.where(do_write, 1, 0).astype(jnp.int8)
+        kind = jnp.where(j < length, kind, jnp.int8(-1))
+        new_read = jnp.where(do_write | (j >= length), read_items,
+                             read_items.at[n_read].set(item_r))
+        new_n = jnp.where(do_write | (j >= length), n_read, n_read + 1)
+        new_written = jnp.where(do_write,
+                                written.at[wpick].set(True), written)
+        return (new_read, new_n, new_written), (kind, item)
+
+    init = (jnp.zeros(cfg.max_ops, jnp.int32), jnp.int32(0),
+            jnp.zeros(cfg.max_ops, bool))
+    _, (kinds, items) = jax.lax.scan(
+        slot, init, (jnp.arange(cfg.max_ops), keys, want_w))
+    return kinds, items.astype(jnp.int32)
+
+
+def _uniform(key, mean, spread):
+    return jax.random.uniform(key, (), minval=mean - spread,
+                              maxval=mean + spread)
+
+
+# --------------------------------------------------------------------------
+# resource pools: reserve argmin(free_at)
+# --------------------------------------------------------------------------
+
+def _reserve(free: jax.Array, now: jax.Array, dur: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    idx = jnp.argmin(free)
+    start = jnp.maximum(now, free[idx])
+    done = start + dur
+    return free.at[idx].set(done), done
+
+
+# --------------------------------------------------------------------------
+# protocol adapters
+# --------------------------------------------------------------------------
+
+def _try_op(cfg: EngCfg, s: EngState, i, x, is_write
+            ) -> Tuple[EngState, jax.Array]:
+    ps = s.pstate
+    if cfg.protocol == "ppcc":
+        ps2, verdict = P.try_op(ps, i, x, is_write)
+        return s._replace(pstate=ps2), verdict
+    if cfg.protocol == "2pl":
+        others = ps.active & (jnp.arange(cfg.n) != i)
+        x_held = (ps.write_set[:, x] & others).any()
+        s_held = (ps.read_set[:, x] & others).any()
+        ok = jnp.where(is_write, ~x_held & ~s_held, ~x_held)
+        rs = ps.read_set.at[i, x].set(ps.read_set[i, x] | (ok & ~is_write))
+        ws = ps.write_set.at[i, x].set(ps.write_set[i, x] | (ok & is_write))
+        verdict = jnp.where(ok, P.PROCEED, P.BLOCK)
+        return s._replace(pstate=ps._replace(read_set=rs, write_set=ws)), \
+            verdict
+    # occ: never blocks
+    rs = ps.read_set.at[i, x].set(ps.read_set[i, x] | ~is_write)
+    ws = ps.write_set.at[i, x].set(ps.write_set[i, x] | is_write)
+    return s._replace(pstate=ps._replace(read_set=rs, write_set=ws)), \
+        jnp.int32(P.PROCEED)
+
+
+def _read_done(cfg: EngCfg, s: EngState, i) -> Tuple[EngState, jax.Array]:
+    """Returns code 0=flush, 1=wait(lock), 2=wait(prec), 3=abort."""
+    ps = s.pstate
+    if cfg.protocol == "ppcc":
+        ps2, got = P.wc_acquire_locks(ps, i)
+        can = P.can_commit(ps2, i)
+        code = jnp.where(~got, 1, jnp.where(can, 0, 2))
+        ps3 = jax.tree.map(lambda a, b: jnp.where(got, a, b), ps2, ps)
+        return s._replace(pstate=ps3), code
+    if cfg.protocol == "2pl":
+        return s, jnp.int32(0)
+    fail = (ps.read_set[i] & s.dirty[i]).any()
+    return s, jnp.where(fail, 3, 0)
+
+
+def _on_commit(cfg: EngCfg, s: EngState, i) -> EngState:
+    ps = s.pstate
+    if cfg.protocol == "occ":
+        # broadcast write set into every active transaction's dirty map
+        others = ps.active & (jnp.arange(cfg.n) != i)
+        dirty = s.dirty | (others[:, None] & ps.write_set[i][None, :])
+        dirty = dirty.at[i].set(False)
+        s = s._replace(dirty=dirty)
+    return s._replace(pstate=P.commit(ps, i))
+
+
+def _on_abort(cfg: EngCfg, s: EngState, i) -> EngState:
+    s = s._replace(dirty=s.dirty.at[i].set(False))
+    return s._replace(pstate=P.abort(s.pstate, i))
+
+
+# --------------------------------------------------------------------------
+# engine
+# --------------------------------------------------------------------------
+
+def _wake_waiters(s: EngState) -> EngState:
+    waiting = (s.phase == PH_BLOCKED) | (s.phase == PH_WC_LOCK) | \
+        (s.phase == PH_WC_PREC)
+    return s._replace(next_time=jnp.where(waiting, s.now, s.next_time))
+
+
+def _begin_txn(cfg: EngCfg, s: EngState, i, fresh: jax.Array) -> EngState:
+    """(Re)start slot i: fresh -> sample new ops; else reuse (restart)."""
+    key, k1, k2 = jax.random.split(s.key, 3)
+    kinds_i, items_i = sample_txn(k1, cfg)
+    new_kinds = jnp.where(fresh, kinds_i, s.kinds[i])
+    new_items = jnp.where(fresh, items_i, s.items[i])
+    s = s._replace(
+        key=key,
+        kinds=s.kinds.at[i].set(new_kinds),
+        items=s.items.at[i].set(new_items),
+        op_idx=s.op_idx.at[i].set(0),
+        pstate=P.begin(s.pstate, i),
+        phase=s.phase.at[i].set(PH_READ),
+        flush_left=s.flush_left.at[i].set(0),
+    )
+    cpu_free, done = _reserve(s.cpu_free, s.now,
+                              _uniform(k2, cfg.cpu_mean, cfg.cpu_spread))
+    return s._replace(
+        cpu_free=cpu_free,
+        next_time=s.next_time.at[i].set(done),
+        next_kind=s.next_kind.at[i].set(EV_ATTEMPT))
+
+
+def _ev_attempt(cfg: EngCfg, s: EngState, i) -> EngState:
+    """CPU burst done (or waiter woken): run the protocol on current op."""
+    done_reading = s.op_idx[i] >= (s.kinds[i] >= 0).sum()
+    in_wc = (s.phase[i] == PH_WC_LOCK) | (s.phase[i] == PH_WC_PREC)
+
+    def read_phase(s: EngState) -> EngState:
+        x = s.items[i, s.op_idx[i]]
+        is_write = s.kinds[i, s.op_idx[i]] == 1
+        s2, verdict = _try_op(cfg, s, i, x, is_write)
+        proceed = verdict == P.PROCEED
+        block = verdict == P.BLOCK
+        key, k1, k2 = jax.random.split(s2.key, 3)
+        s2 = s2._replace(key=key)
+        # --- proceed ---
+        op2 = jnp.where(proceed, s.op_idx[i] + 1, s.op_idx[i])
+        was_last = op2 >= (s.kinds[i] >= 0).sum()
+        s2 = s2._replace(op_idx=s2.op_idx.at[i].set(op2),
+                         ops_done=s2.ops_done + proceed)
+        # reads pay a disk access; writes go straight to the next CPU burst
+        dur_io = _uniform(k1, cfg.io_mean, cfg.io_spread)
+        dur_cpu = _uniform(k2, cfg.cpu_mean, cfg.cpu_spread)
+
+        def do_proceed(s2: EngState) -> EngState:
+            def do_read(s3):
+                disk_free, done = _reserve(s3.disk_free, s3.now, dur_io)
+                return s3._replace(
+                    disk_free=disk_free,
+                    next_time=s3.next_time.at[i].set(done),
+                    next_kind=s3.next_kind.at[i].set(EV_DISK_DONE),
+                    phase=s3.phase.at[i].set(PH_READ))
+
+            def do_write(s3):
+                # last op: enter wait-to-commit immediately (no extra CPU
+                # burst), matching the oracle's transition
+                def sched_cpu(s4):
+                    cpu_free, done = _reserve(s4.cpu_free, s4.now, dur_cpu)
+                    return s4._replace(
+                        cpu_free=cpu_free,
+                        next_time=s4.next_time.at[i].set(done),
+                        next_kind=s4.next_kind.at[i].set(EV_ATTEMPT),
+                        phase=s4.phase.at[i].set(PH_READ))
+
+                def to_wc(s4):
+                    return s4._replace(
+                        next_time=s4.next_time.at[i].set(s4.now),
+                        next_kind=s4.next_kind.at[i].set(EV_ATTEMPT),
+                        phase=s4.phase.at[i].set(PH_READ))
+                return jax.lax.cond(was_last, to_wc, sched_cpu, s3)
+            return jax.lax.cond(is_write, do_write, do_read, s2)
+
+        def do_block(s2: EngState) -> EngState:
+            was_blocked = s.phase[i] == PH_BLOCKED
+            new_deadline = jnp.where(was_blocked, s.deadline[i],
+                                     s.now + cfg.block_timeout)
+            return s2._replace(
+                phase=s2.phase.at[i].set(PH_BLOCKED),
+                deadline=s2.deadline.at[i].set(new_deadline),
+                next_time=s2.next_time.at[i].set(new_deadline),
+                next_kind=s2.next_kind.at[i].set(EV_TIMEOUT),
+                blocks=s2.blocks + jnp.where(was_blocked, 0, 1))
+
+        def do_abort(s2: EngState) -> EngState:
+            return _abort(cfg, s2, i)
+
+        return jax.lax.cond(
+            proceed, do_proceed,
+            lambda s_: jax.lax.cond(block, do_block, do_abort, s_), s2)
+
+    def wc_phase(s: EngState) -> EngState:
+        s2, code = _read_done(cfg, s, i)
+
+        def flush(s3: EngState) -> EngState:
+            n_w = s3.pstate.write_set[i].sum().astype(jnp.int32)
+            s3 = s3._replace(flush_left=s3.flush_left.at[i].set(n_w),
+                             phase=s3.phase.at[i].set(PH_FLUSH))
+            return jax.lax.cond(n_w > 0, _flush_one,
+                                lambda s4: _commit(cfg, s4, i), s3)
+
+        def wait_lock(s3: EngState) -> EngState:
+            first = s.phase[i] != PH_WC_LOCK
+            new_deadline = jnp.where(first, s3.now + cfg.block_timeout,
+                                     s3.deadline[i])
+            return s3._replace(
+                phase=s3.phase.at[i].set(PH_WC_LOCK),
+                deadline=s3.deadline.at[i].set(new_deadline),
+                next_time=s3.next_time.at[i].set(new_deadline),
+                next_kind=s3.next_kind.at[i].set(EV_TIMEOUT))
+
+        def wait_prec(s3: EngState) -> EngState:
+            return s3._replace(
+                phase=s3.phase.at[i].set(PH_WC_PREC),
+                next_time=s3.next_time.at[i].set(INF),
+                next_kind=s3.next_kind.at[i].set(EV_ATTEMPT))
+
+        def _flush_one(s3: EngState) -> EngState:
+            key, k1 = jax.random.split(s3.key)
+            disk_free, done = _reserve(
+                s3.disk_free, s3.now, _uniform(k1, cfg.io_mean,
+                                               cfg.io_spread))
+            return s3._replace(
+                key=key, disk_free=disk_free,
+                next_time=s3.next_time.at[i].set(done),
+                next_kind=s3.next_kind.at[i].set(EV_FLUSH_DONE))
+
+        return jax.lax.switch(
+            code, [flush, wait_lock, wait_prec,
+                   lambda s3: _abort(cfg, s3, i)], s2)
+
+    return jax.lax.cond(done_reading | in_wc, wc_phase, read_phase, s)
+
+
+def _ev_disk_done(cfg: EngCfg, s: EngState, i) -> EngState:
+    key, k1 = jax.random.split(s.key)
+    s = s._replace(key=key)
+    done_reading = s.op_idx[i] >= (s.kinds[i] >= 0).sum()
+
+    def to_wc(s2):                      # last read done -> wait-to-commit
+        return s2._replace(
+            next_time=s2.next_time.at[i].set(s2.now),
+            next_kind=s2.next_kind.at[i].set(EV_ATTEMPT))
+
+    def sched_cpu(s2):
+        cpu_free, done = _reserve(
+            s2.cpu_free, s2.now, _uniform(k1, cfg.cpu_mean,
+                                          cfg.cpu_spread))
+        return s2._replace(
+            cpu_free=cpu_free,
+            next_time=s2.next_time.at[i].set(done),
+            next_kind=s2.next_kind.at[i].set(EV_ATTEMPT))
+    return jax.lax.cond(done_reading, to_wc, sched_cpu, s)
+
+
+def _ev_flush_done(cfg: EngCfg, s: EngState, i) -> EngState:
+    left = s.flush_left[i] - 1
+    s = s._replace(flush_left=s.flush_left.at[i].set(left))
+
+    def more(s2):
+        key, k1 = jax.random.split(s2.key)
+        disk_free, done = _reserve(
+            s2.disk_free, s2.now, _uniform(k1, cfg.io_mean, cfg.io_spread))
+        return s2._replace(key=key, disk_free=disk_free,
+                           next_time=s2.next_time.at[i].set(done),
+                           next_kind=s2.next_kind.at[i].set(EV_FLUSH_DONE))
+    return jax.lax.cond(left > 0, more,
+                        lambda s2: _commit(cfg, s2, i), s)
+
+
+def _commit(cfg: EngCfg, s: EngState, i) -> EngState:
+    if cfg.protocol == "occ":
+        # close the Kung-Robinson overlap window: re-validate at commit
+        fail = (s.pstate.read_set[i] & s.dirty[i]).any()
+
+        def ok(s2):
+            return _commit_body(cfg, s2, i)
+        return jax.lax.cond(fail, lambda s2: _abort(cfg, s2, i), ok, s)
+    return _commit_body(cfg, s, i)
+
+
+def _commit_body(cfg: EngCfg, s: EngState, i) -> EngState:
+    s = _on_commit(cfg, s, i)
+    s = s._replace(commits=s.commits + 1)
+    s = _wake_waiters(s)
+    return _begin_txn(cfg, s, i, fresh=jnp.bool_(True))
+
+
+def _abort(cfg: EngCfg, s: EngState, i) -> EngState:
+    s = _on_abort(cfg, s, i)
+    key, k1 = jax.random.split(s.key)
+    delay = jax.random.uniform(k1, (), minval=0.5 * cfg.restart_mean,
+                               maxval=1.5 * cfg.restart_mean)
+    s = _wake_waiters(s._replace(key=key, aborts=s.aborts + 1))
+    return s._replace(
+        phase=s.phase.at[i].set(PH_RESTART),
+        next_time=s.next_time.at[i].set(s.now + delay),
+        next_kind=s.next_kind.at[i].set(EV_RESTART))
+
+
+def _ev_timeout(cfg: EngCfg, s: EngState, i) -> EngState:
+    still = (s.phase[i] == PH_BLOCKED) | (s.phase[i] == PH_WC_LOCK)
+    expired = s.now >= s.deadline[i]
+    return jax.lax.cond(still & expired,
+                        lambda s2: _abort(cfg, s2, i),
+                        lambda s2: _ev_attempt(cfg, s2, i), s)
+
+
+def _ev_restart(cfg: EngCfg, s: EngState, i) -> EngState:
+    return _begin_txn(cfg, s, i, fresh=jnp.bool_(False))
+
+
+def make_engine(p: SimParams, protocol: str, max_iters: int = 400_000):
+    cfg = dataclasses.replace(_cfg(p, max_iters), protocol=protocol)
+
+    def init(seed) -> EngState:
+        key = jax.random.PRNGKey(seed)
+        s = EngState(
+            now=jnp.float32(0.0), key=key,
+            pstate=P.init_state(cfg.n, cfg.d),
+            dirty=jnp.zeros((cfg.n, cfg.d), bool),
+            kinds=jnp.full((cfg.n, cfg.max_ops), -1, jnp.int8),
+            items=jnp.zeros((cfg.n, cfg.max_ops), jnp.int32),
+            op_idx=jnp.zeros(cfg.n, jnp.int32),
+            phase=jnp.full(cfg.n, PH_OFF, jnp.int8),
+            next_time=jnp.full(cfg.n, INF),
+            next_kind=jnp.zeros(cfg.n, jnp.int8),
+            deadline=jnp.zeros(cfg.n, jnp.float32),
+            flush_left=jnp.zeros(cfg.n, jnp.int32),
+            cpu_free=jnp.zeros(cfg.cpus, jnp.float32),
+            disk_free=jnp.zeros(cfg.disks, jnp.float32),
+            commits=jnp.int32(0), aborts=jnp.int32(0),
+            blocks=jnp.int32(0), ops_done=jnp.int32(0),
+            iters=jnp.int32(0))
+        return jax.lax.fori_loop(
+            0, cfg.n,
+            lambda i, s_: _begin_txn(cfg, s_, i, jnp.bool_(True)), s)
+
+    def cond(s: EngState):
+        return (s.now <= cfg.horizon) & (s.iters < cfg.max_iters) & \
+            (s.next_time.min() < 0.5 * INF)
+
+    def body(s: EngState) -> EngState:
+        i = jnp.argmin(s.next_time)
+        t = s.next_time[i]
+        s = s._replace(now=t, iters=s.iters + 1,
+                       next_time=s.next_time.at[i].set(INF))
+        return jax.lax.switch(
+            s.next_kind[i].astype(jnp.int32),
+            [functools.partial(_ev_attempt, cfg),
+             functools.partial(_ev_disk_done, cfg),
+             functools.partial(_ev_flush_done, cfg),
+             functools.partial(_ev_timeout, cfg),
+             functools.partial(_ev_restart, cfg)],
+            s, i)
+
+    @jax.jit
+    def run(seed: jax.Array) -> EngState:
+        return jax.lax.while_loop(cond, body, init(seed))
+
+    return run
+
+
+def simulate(p: SimParams, protocol: str) -> SimResult:
+    run = make_engine(p, protocol)
+    s = run(jnp.int32(p.seed))
+    res = SimResult(protocol=protocol, params=p)
+    res.commits = int(s.commits)
+    res.aborts = int(s.aborts)
+    res.blocks = int(s.blocks)
+    res.ops_executed = int(s.ops_done)
+    res.sim_time = float(min(float(s.now), p.horizon))
+    return res
+
+
+def simulate_sweep(p: SimParams, protocol: str, seeds) -> Any:
+    """vmap over seeds — one SPMD computation, shardable over `data`."""
+    run = make_engine(p, protocol)
+    final = jax.vmap(run)(jnp.asarray(seeds, jnp.int32))
+    return {"commits": final.commits, "aborts": final.aborts,
+            "blocks": final.blocks}

@@ -1,0 +1,264 @@
+"""Tensorised Prudent-Precedence protocol state — the paper's contribution
+as a composable JAX module.
+
+The protocol state for ``n`` concurrent transactions over ``d`` items is a
+fixed-shape pytree (`PPCCState`), and every protocol transition (paper
+Section 2.2-2.3) is a pure, jit-able function:
+
+    try_read / try_write     read-phase admission under the Prudent
+                             Precedence Rule (returns verdict + new state)
+    wc_acquire_locks         wait-to-commit exclusive locking (Fig. 4)
+    can_commit               all predecessors have left (Fig. 4)
+    commit / abort           leave the precedence graph, release locks
+
+The invariant that makes the paper's protocol cheap — every precedence
+path has length <= 1, hence acyclicity without cycle detection (Thm. 1) —
+is a one-line tensor predicate here (`assert_invariant`).
+
+These primitives are consumed by
+
+* ``repro.core.jaxsim``  — the tensorised discrete-event simulator,
+* ``repro.sched.scheduler`` — PPCC batch admission for the transactional
+  store (conflict matrices from the Pallas kernel in
+  ``repro.kernels.conflict``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# verdicts
+PROCEED, BLOCK, ABORT = 0, 1, 2
+
+
+class PPCCState(NamedTuple):
+    """Protocol state for n transaction slots over d items."""
+
+    read_set: jax.Array      # bool[n, d]
+    write_set: jax.Array     # bool[n, d]  (private-workspace writes)
+    prec: jax.Array          # bool[n, n]  prec[a, b] == True iff a -> b
+    preceding: jax.Array     # bool[n]     class bit: has preceded someone
+    preceded: jax.Array      # bool[n]     class bit: has been preceded
+    active: jax.Array        # bool[n]     slot holds a live transaction
+    locks: jax.Array         # int32[d]    wait-to-commit lock owner or -1
+
+    @property
+    def n(self) -> int:
+        return self.read_set.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.read_set.shape[1]
+
+
+def init_state(n: int, d: int) -> PPCCState:
+    return PPCCState(
+        read_set=jnp.zeros((n, d), jnp.bool_),
+        write_set=jnp.zeros((n, d), jnp.bool_),
+        prec=jnp.zeros((n, n), jnp.bool_),
+        preceding=jnp.zeros((n,), jnp.bool_),
+        preceded=jnp.zeros((n,), jnp.bool_),
+        active=jnp.zeros((n,), jnp.bool_),
+        locks=jnp.full((d,), -1, jnp.int32),
+    )
+
+
+def begin(s: PPCCState, i: jax.Array) -> PPCCState:
+    """Activate slot i as a fresh independent transaction."""
+    return s._replace(
+        read_set=s.read_set.at[i].set(False),
+        write_set=s.write_set.at[i].set(False),
+        prec=s.prec.at[i, :].set(False).at[:, i].set(False),
+        preceding=s.preceding.at[i].set(False),
+        preceded=s.preceded.at[i].set(False),
+        active=s.active.at[i].set(True),
+    )
+
+
+def _lock_verdict(s: PPCCState, i: jax.Array, x: jax.Array) -> jax.Array:
+    """Paper Fig. 3: accessing an item locked by a wait-to-commit txn.
+
+    Returns PROCEED when unlocked / self-locked, ABORT when the accessor
+    already precedes the lock owner (circular-wait prevention), BLOCK
+    otherwise.
+    """
+    owner = s.locks[x]
+    locked_by_other = (owner >= 0) & (owner != i)
+    i_precedes_owner = s.prec[i, jnp.maximum(owner, 0)]
+    return jnp.where(
+        locked_by_other,
+        jnp.where(i_precedes_owner, ABORT, BLOCK),
+        PROCEED,
+    )
+
+
+def try_read(s: PPCCState, i: jax.Array, x: jax.Array
+             ) -> Tuple[PPCCState, jax.Array]:
+    """Transaction i reads item x (RAW handling, paper Example 1).
+
+    Under the strict protocol the reader gets the *old* value, so the
+    reader precedes every uncommitted writer of x.  The Prudent Precedence
+    Rule admits the read iff (i) the reader has never been preceded and
+    (ii) no such writer has ever preceded anyone.
+    """
+    lock_v = _lock_verdict(s, i, x)
+    me = jax.nn.one_hot(i, s.n, dtype=jnp.bool_)
+    # writers of x we do not already precede
+    new_writers = s.write_set[:, x] & s.active & ~me & ~s.prec[i, :]
+    any_new = new_writers.any()
+    rule_ok = (~s.preceded[i]) & ~(new_writers & s.preceding).any()
+    allowed = (lock_v == PROCEED) & (~any_new | rule_ok)
+    verdict = jnp.where(lock_v != PROCEED, lock_v,
+                        jnp.where(allowed, PROCEED, BLOCK))
+
+    def apply(s: PPCCState) -> PPCCState:
+        add = new_writers & allowed
+        return s._replace(
+            read_set=s.read_set.at[i, x].set(
+                s.read_set[i, x] | allowed),
+            prec=s.prec.at[i, :].set(s.prec[i, :] | add),
+            preceding=s.preceding.at[i].set(
+                s.preceding[i] | (allowed & any_new)),
+            preceded=s.preceded | add,
+        )
+
+    return apply(s), verdict
+
+
+def try_write(s: PPCCState, i: jax.Array, x: jax.Array
+              ) -> Tuple[PPCCState, jax.Array]:
+    """Transaction i writes item x in its workspace (WAR, paper Example 2).
+
+    Every current reader of x precedes the writer.  Admitted iff
+    (i) the writer has never preceded anyone and (ii) no such reader has
+    ever been preceded.
+    """
+    lock_v = _lock_verdict(s, i, x)
+    me = jax.nn.one_hot(i, s.n, dtype=jnp.bool_)
+    new_readers = s.read_set[:, x] & s.active & ~me & ~s.prec[:, i]
+    any_new = new_readers.any()
+    rule_ok = (~s.preceding[i]) & ~(new_readers & s.preceded).any()
+    allowed = (lock_v == PROCEED) & (~any_new | rule_ok)
+    verdict = jnp.where(lock_v != PROCEED, lock_v,
+                        jnp.where(allowed, PROCEED, BLOCK))
+
+    def apply(s: PPCCState) -> PPCCState:
+        add = new_readers & allowed
+        return s._replace(
+            write_set=s.write_set.at[i, x].set(
+                s.write_set[i, x] | allowed),
+            prec=s.prec.at[:, i].set(s.prec[:, i] | add),
+            preceded=s.preceded.at[i].set(
+                s.preceded[i] | (allowed & any_new)),
+            preceding=s.preceding | add,
+        )
+
+    return apply(s), verdict
+
+
+def try_op(s: PPCCState, i: jax.Array, x: jax.Array, is_write: jax.Array
+           ) -> Tuple[PPCCState, jax.Array]:
+    """Dispatch on op kind without python control flow."""
+    sr, vr = try_read(s, i, x)
+    sw, vw = try_write(s, i, x)
+    pick = lambda a, b: jnp.where(is_write, b, a)
+    return jax.tree.map(pick, sr, sw), pick(vr, vw)
+
+
+def wc_acquire_locks(s: PPCCState, i: jax.Array
+                     ) -> Tuple[PPCCState, jax.Array]:
+    """Wait-to-commit: atomically lock the write set (all-or-nothing,
+    which prevents deadlock between wait-to-commit transactions).
+    Returns (state, acquired: bool)."""
+    ws = s.write_set[i]
+    free = (s.locks < 0) | (s.locks == i)
+    ok = jnp.where(ws, free, True).all()
+    new_locks = jnp.where(ws & ok, i.astype(jnp.int32), s.locks)
+    return s._replace(locks=new_locks), ok
+
+
+def can_commit(s: PPCCState, i: jax.Array) -> jax.Array:
+    """Fig. 4: proceed to commit iff no active transaction precedes i."""
+    return ~(s.prec[:, i] & s.active).any()
+
+
+def _leave(s: PPCCState, i: jax.Array) -> PPCCState:
+    """Shared cleanup for commit and abort: transaction i leaves the
+    system — drop its arcs, sets and locks."""
+    return s._replace(
+        read_set=s.read_set.at[i].set(False),
+        write_set=s.write_set.at[i].set(False),
+        prec=s.prec.at[i, :].set(False).at[:, i].set(False),
+        active=s.active.at[i].set(False),
+        locks=jnp.where(s.locks == i, -1, s.locks),
+    )
+
+
+def commit(s: PPCCState, i: jax.Array) -> PPCCState:
+    return _leave(s, i)
+
+
+def abort(s: PPCCState, i: jax.Array) -> PPCCState:
+    return _leave(s, i)
+
+
+# --------------------------------------------------------------------------
+# invariants (paper Theorem 1)
+# --------------------------------------------------------------------------
+
+def path_length_leq_one(s: PPCCState) -> jax.Array:
+    """True iff no precedence path of length 2 exists: prec @ prec == 0."""
+    p = s.prec.astype(jnp.int32)
+    return (p @ p).sum() == 0
+
+
+def acyclic(s: PPCCState) -> jax.Array:
+    """With paths of length <= 1, a cycle could only be a 2-cycle or a
+    self-loop; check both directly."""
+    two_cycle = (s.prec & s.prec.T).any()
+    self_loop = jnp.diagonal(s.prec).any()
+    return ~(two_cycle | self_loop) & path_length_leq_one(s)
+
+
+def classes_consistent(s: PPCCState) -> jax.Array:
+    """Arcs only run preceding -> preceded; class bits cover the arcs."""
+    rows_ok = (~s.prec.any(axis=1) | s.preceding).all()
+    cols_ok = (~s.prec.any(axis=0) | s.preceded).all()
+    return rows_ok & cols_ok
+
+
+# --------------------------------------------------------------------------
+# batch admission (used by repro.sched.scheduler)
+# --------------------------------------------------------------------------
+
+class BatchVerdict(NamedTuple):
+    admitted: jax.Array      # bool[n] ops admitted this round
+    blocked: jax.Array       # bool[n]
+    aborted: jax.Array       # bool[n]
+    state: PPCCState
+
+
+def admit_ops(s: PPCCState, txn: jax.Array, item: jax.Array,
+              is_write: jax.Array, valid: jax.Array) -> BatchVerdict:
+    """Admit a batch of operations in priority (index) order.
+
+    The Prudent Precedence Rule is order-dependent, so exactness requires
+    a sequential pass: a ``lax.scan`` over the op list.  Each element is
+    (txn slot, item, is_write, valid).  Invalid lanes are no-ops.
+    """
+    def step(s: PPCCState, op):
+        t, x, w, v = op
+        s2, verdict = try_op(s, t, x, w)
+        s2 = jax.tree.map(lambda a, b: jnp.where(v, a, b), s2, s)
+        verdict = jnp.where(v, verdict, BLOCK)
+        return s2, verdict
+
+    s, verdicts = jax.lax.scan(step, s, (txn, item, is_write, valid))
+    return BatchVerdict(
+        admitted=(verdicts == PROCEED) & valid,
+        blocked=(verdicts == BLOCK) & valid,
+        aborted=(verdicts == ABORT) & valid,
+        state=s,
+    )

@@ -1,0 +1,95 @@
+"""ACL-style workload generation (paper Section 3.1).
+
+Each transaction is a randomized sequence of read and write operations.
+Writes are always performed on items that have already been read in the
+same transaction (the paper's strict-protocol assumption); with write
+probability 0.5 every read is eventually paired with a write of the same
+item, matching the paper's description of the w=0.5 setting.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from .types import Op, OpKind, SimParams
+
+
+def sample_txn_ops(rng: np.random.Generator, p: SimParams) -> List[Op]:
+    """Sample one transaction's operation list.
+
+    * length L ~ uniform[mean - spread, mean + spread], at least 2
+    * each op: with prob `write_prob` a WRITE of a previously-read,
+      not-yet-written item (if none is available it degrades to a READ —
+      e.g. the very first op is always a READ);
+      otherwise a READ of a uniformly drawn item not read before.
+    """
+    lo = max(2, p.txn_size_mean - p.txn_size_spread)
+    hi = p.txn_size_mean + p.txn_size_spread
+    length = int(rng.integers(lo, hi + 1))
+    ops: List[Op] = []
+    read_items: List[int] = []
+    written: set = set()
+    for _ in range(length):
+        want_write = rng.random() < p.write_prob
+        avail = [x for x in read_items if x not in written]
+        if want_write and avail:
+            item = avail[int(rng.integers(len(avail)))]
+            written.add(item)
+            ops.append(Op(OpKind.WRITE, item))
+        else:
+            # Draw an unread item (retry loop is fine: db >> txn size).
+            for _ in range(64):
+                item = int(rng.integers(p.db_size))
+                if item not in read_items:
+                    break
+            read_items.append(item)
+            ops.append(Op(OpKind.READ, item))
+    return ops
+
+
+def cpu_burst(rng: np.random.Generator, p: SimParams) -> float:
+    return float(rng.uniform(p.cpu_burst_mean - p.cpu_burst_spread,
+                             p.cpu_burst_mean + p.cpu_burst_spread))
+
+
+def io_time(rng: np.random.Generator, p: SimParams) -> float:
+    return float(rng.uniform(p.io_time_mean - p.io_time_spread,
+                             p.io_time_mean + p.io_time_spread))
+
+
+def restart_delay(rng: np.random.Generator, p: SimParams) -> float:
+    m = p.restart_delay_mean
+    return float(rng.uniform(0.5 * m, 1.5 * m))
+
+
+def sample_txn_tensor(
+    rng: np.random.Generator, p: SimParams, max_ops: int
+) -> "tuple[np.ndarray, np.ndarray, int]":
+    """Tensorised transaction for the JAX engine.
+
+    Returns (kinds[max_ops] int8, items[max_ops] int32, length).  Slots
+    past `length` are padded with kind=-1.
+    """
+    ops = sample_txn_ops(rng, p)
+    kinds = np.full((max_ops,), -1, np.int8)
+    items = np.zeros((max_ops,), np.int32)
+    n = min(len(ops), max_ops)
+    for i, op in enumerate(ops[:n]):
+        kinds[i] = int(op.kind)
+        items[i] = op.item
+    return kinds, items, n
+
+
+def workload_batch(
+    seed: int, p: SimParams, n_txns: int, max_ops: int
+) -> "tuple[np.ndarray, np.ndarray, np.ndarray]":
+    """A batch of tensorised transactions: kinds[N,max_ops], items[N,max_ops],
+    lengths[N]."""
+    rng = np.random.default_rng(seed)
+    kinds = np.empty((n_txns, max_ops), np.int8)
+    items = np.empty((n_txns, max_ops), np.int32)
+    lens = np.empty((n_txns,), np.int32)
+    for t in range(n_txns):
+        kinds[t], items[t], lens[t] = sample_txn_tensor(rng, p, max_ops)
+    return kinds, items, lens

@@ -1,0 +1,147 @@
+"""Deterministic, shardable, checkpointable synthetic token pipeline.
+
+Production shape: each host generates only its addressable shard of the
+global batch (``make_global_batch`` uses
+``jax.make_array_from_callback``), derived deterministically from
+(step, shard_index) — so the pipeline needs no coordination, survives
+restarts (state == step counter), and supports elastic re-sharding
+(a new mesh simply re-partitions the same deterministic stream).
+
+Straggler mitigation: ``Prefetcher`` keeps ``depth`` batches in flight
+on a background thread, so a slow host-side generation never stalls the
+device step; it also exposes a deadline-skip hook used by the async
+trainer example.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeSpec
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+
+    def to_dict(self) -> Dict[str, int]:
+        return {"step": self.step}
+
+    @classmethod
+    def from_dict(cls, d) -> "PipelineState":
+        return cls(step=int(d["step"]))
+
+
+def _tokens_for(cfg: ModelConfig, seed: int, step: int, lo: int, hi: int,
+                seq: int) -> np.ndarray:
+    """Rows [lo, hi) of the global batch at `step`.
+
+    Seeded PER ROW, so any shard of the batch sees exactly the same data
+    regardless of how the mesh partitions it (elastic-rescale safe)."""
+    rows = []
+    for r in range(lo, hi):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, step, r]))
+        rows.append(rng.integers(0, cfg.vocab, (seq + 1,), dtype=np.int32))
+    return np.stack(rows)
+
+
+class SyntheticLM:
+    """Deterministic LM batch stream (tokens + shifted labels)."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, seed: int = 0,
+                 state: Optional[PipelineState] = None):
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        self.state = state or PipelineState()
+
+    def host_batch(self, step: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Whole global batch on one host (tests / single-host runs)."""
+        step = self.state.step if step is None else step
+        raw = _tokens_for(self.cfg, self.seed, step, 0,
+                          self.shape.global_batch, self.shape.seq_len)
+        out = {"tokens": raw[:, :-1], "labels": raw[:, 1:]}
+        if self.cfg.family == "vlm":
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, step, 7]))
+            out["img"] = rng.standard_normal(
+                (self.shape.global_batch, self.cfg.n_img_tokens,
+                 self.cfg.d_model)).astype(np.float32)
+        if self.cfg.family == "audio":
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, step, 9]))
+            out["frames"] = rng.standard_normal(
+                (self.shape.global_batch, self.shape.seq_len,
+                 self.cfg.d_model)).astype(np.float32)
+            del out["tokens"]
+        return out
+
+    def make_global_batch(self, mesh: Mesh, step: Optional[int] = None
+                          ) -> Dict[str, jax.Array]:
+        """Sharded global arrays; each device's shard is generated
+        directly from the deterministic stream (no host gather)."""
+        step = self.state.step if step is None else step
+        spec = P(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+        sharding = NamedSharding(mesh, spec)
+        b, s = self.shape.global_batch, self.shape.seq_len
+
+        def cb_tokens(idx):
+            lo = idx[0].start or 0
+            hi = idx[0].stop if idx[0].stop is not None else b
+            return _tokens_for(self.cfg, self.seed, step, lo, hi,
+                               s)[:, :-1]
+
+        def cb_labels(idx):
+            lo = idx[0].start or 0
+            hi = idx[0].stop if idx[0].stop is not None else b
+            return _tokens_for(self.cfg, self.seed, step, lo, hi,
+                               s)[:, 1:]
+
+        tokens = jax.make_array_from_callback((b, s), sharding, cb_tokens)
+        labels = jax.make_array_from_callback((b, s), sharding, cb_labels)
+        return {"tokens": tokens, "labels": labels}
+
+    def advance(self) -> None:
+        self.state.step += 1
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.host_batch()
+            self.advance()
+
+
+class Prefetcher:
+    """Background-thread prefetch with bounded depth."""
+
+    def __init__(self, it: Iterator[Any], depth: int = 2):
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+            self.q.put(None)
+
+        self.t = threading.Thread(target=worker, daemon=True)
+        self.t.start()
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        """Blocks up to `timeout`; raises queue.Empty on deadline —
+        callers may skip the step (straggler mitigation)."""
+        return self.q.get(timeout=timeout)
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

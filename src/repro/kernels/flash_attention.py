@@ -1,0 +1,122 @@
+"""Flash attention Pallas-TPU kernel (block-wise online softmax).
+
+Layout: q [B, Hq, Sq, D], k/v [B, Hkv, Sk, D] -> out [B, Hq, Sq, D].
+GQA is handled in the index maps (query-head h reads KV head h // group)
+so KV is never materialised per query head.
+
+Grid: (B, Hq, Sq/bq, Sk/bk) — the innermost axis iterates KV blocks
+sequentially (TPU grid order), carrying the online-softmax state
+(m, l, acc) in VMEM scratch.  Causal and sliding-window masking skip
+fully-masked KV blocks via ``pl.when``.
+
+VMEM budget per step: q/k/v blocks (bq + 2 bk) x D x 2B + acc bq x D x 4B
++ [bq, bk] fp32 scores — with bq = bk = 128 ... 512 and D <= 256 this
+stays well inside the ~16 MiB/core VMEM of TPU v5e, and all matmul dims
+are multiples of 128 for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, sk_blocks: int, causal: bool,
+                  window: int, sm_scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + bq - 1
+    if window > 0:
+        run &= k_start + bk - 1 >= q_start - window + 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        spans_q = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (bq, bk), 0)
+        spans_k = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (bq, bk), 1)
+        if causal:
+            s = jnp.where(spans_q >= spans_k, s, NEG_INF)
+        if window > 0:
+            s = jnp.where(spans_q - spans_k < window, s, NEG_INF)
+        m_prev = m_ref[...]                           # [bq]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == sk_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    sm_scale: Optional[float] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q [B, Hq, Sq, D]; k/v [B, Hkv, Sk, D]; Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    grid = (b, hq, sq // bq, sk // bk)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, sk_blocks=sk // bk, causal=causal,
+        window=window, sm_scale=sm_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki, g_=g: (b_, h // g_, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki, g_=g: (b_, h // g_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m
+            pltpu.VMEM((bq,), jnp.float32),       # l
+            pltpu.VMEM((bq, d), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

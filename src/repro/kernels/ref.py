@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        sm_scale: Optional[float] = None) -> jax.Array:
+    """q [B, Hq, S, D]; k/v [B, Hkv, T, D] — plain softmax attention."""
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    s_ = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * sm_scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s_ = jnp.where(mask[None, None], s_, -jnp.inf)
+    w = jax.nn.softmax(s_, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)          # fully-masked rows
+    return jnp.einsum("bhst,bhtd->bhsd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def conflict_matrix_ref(read_bits: jax.Array, write_bits: jax.Array
+                        ) -> jax.Array:
+    """uint32[N, W] x uint32[N, W] -> bool[N, N]."""
+    return ((read_bits[:, None, :] & write_bits[None, :, :]) != 0
+            ).any(axis=-1)
+
+
+def wkv_ref(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+            u: jax.Array, head_dim: int,
+            state0: Optional[jax.Array] = None):
+    """Sequential (step-by-step) WKV6 recurrence — the gold semantics.
+
+    r/k/v [B, S, D] (D = H * head_dim), log_w [B, S, D] fp32, u [D].
+    Returns (out [B, S, D] fp32, final_state [B, H, dk, dv] fp32).
+    """
+    b, s, d = r.shape
+    h = d // head_dim
+    rr = r.astype(jnp.float32).reshape(b, s, h, head_dim)
+    kk = k.astype(jnp.float32).reshape(b, s, h, head_dim)
+    vv = v.astype(jnp.float32).reshape(b, s, h, head_dim)
+    ww = jnp.exp(log_w.astype(jnp.float32)).reshape(b, s, h, head_dim)
+    uu = u.astype(jnp.float32).reshape(h, head_dim)
+    state = (jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+             if state0 is None else state0)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                      # [b,h,k] / [b,h,v]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         state + uu[None, :, :, None] * kv)
+        state = wt[..., None] * state + kv
+        return state, out
+
+    inp = tuple(jnp.moveaxis(x, 1, 0) for x in (rr, kk, vv, ww))
+    state, outs = jax.lax.scan(step, state, inp)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, d), state

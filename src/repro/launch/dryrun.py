@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including jax and
+# repro.*): jax locks the device count at first initialisation.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory / cost / collective
+analysis for the roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3_0p6b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh pod1|pod2|both]
+    python -m repro.launch.dryrun --all --skip-existing
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json (incremental
+cache, one file per cell).
+"""
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.roofline import hlo_parse
+from repro.launch import mesh as mesh_mod
+from repro.launch import specs as specs_mod
+from repro.launch import steps as steps_mod
+from repro.models import LM
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+((?:\w+\[[^\]]*\](?:,\s*)?)+|\(\s*[^)]*\))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                      r"pred)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+               "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip collective traffic estimate from the partitioned HLO.
+
+    Shapes in post-SPMD HLO are per-device.  Ring-model accounting:
+    all-reduce ~ 2x result bytes, all-gather ~ result bytes, others ~
+    result bytes (the result of reduce-scatter/all-to-all/permute bounds
+    what each chip receives).
+    """
+    out = {k: 0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    counts = dict(out)
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        result_types, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(result_types)
+        factor = 2 if kind == "all-reduce" else 1
+        out[kind] += factor * nbytes
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _opt(cfg):
+    # §Perf optimized: flash-style chunked attention (no S^2
+    # materialisation) + pinned activation shardings (no GSPMD layout
+    # flip-flopping) + sequence-chunked CE for wide-vocab models only
+    # (for small vocabs the per-chunk fp32 head-grad accumulation costs
+    # more than the logits save — measured on rwkv6, EXPERIMENTS §Perf).
+    # rwkv keeps baseline shardings: every collective-cutting variant we
+    # measured trades +40 GiB of fp32 layer saves (doesn't fit HBM) —
+    # see the §Perf iteration log.
+    kw = dict(attn_impl="chunked",
+              ce_chunk=512 if cfg.vocab >= 100_000 else 0)
+    if cfg.family != "rwkv":
+        kw["act_constraints"] = True
+    return cfg.with_(**kw)
+
+
+VARIANTS = {
+    "base": lambda cfg: cfg,
+    "opt": _opt,
+    # opt + 8-way gradient accumulation: shrinks per-microbatch
+    # activation temps for the >HBM train cells
+    "opt_accum8": _opt,
+    "opt_accum16": _opt,
+}
+VARIANT_ACCUM = {"opt_accum8": 8, "opt_accum16": 16}
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "base"):
+    """Returns (fn, args, in_shardings, donate) ready to lower."""
+    cfg = VARIANTS[variant](configs.get(arch))
+    lm = LM(cfg)
+    sp = specs_mod.shape_by_name(shape_name)
+    params_shapes = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    p_specs = shd.param_specs(cfg, params_shapes, mesh)
+    p_shard = shd.to_shardings(mesh, p_specs)
+    params_sds = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        params_shapes, p_shard)
+
+    if sp.kind == "train":
+        step = steps_mod.make_train_step(
+            cfg, accum=VARIANT_ACCUM.get(variant, 1))
+        opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+        o_specs = jax.tree.map(lambda x: jax.sharding.PartitionSpec(),
+                               opt_shapes)
+        # m/v/master shard like params; step scalar replicated
+        o_specs = adamw.AdamWState(
+            step=jax.sharding.PartitionSpec(),
+            m=p_specs, v=p_specs, master=p_specs)
+        o_shard = shd.to_shardings(mesh, o_specs)
+        opt_sds = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            opt_shapes, o_shard)
+        (batch,), (b_specs,) = specs_mod.cell_specs(cfg, shape_name, mesh)
+        b_shard = shd.to_shardings(mesh, b_specs)
+        args = (params_sds, opt_sds, batch)
+        in_sh = (p_shard, o_shard, b_shard)
+        return step, args, in_sh, (0, 1)
+    if sp.kind == "prefill":
+        step = steps_mod.make_prefill_step(cfg)
+        (batch,), (b_specs,) = specs_mod.cell_specs(cfg, shape_name, mesh)
+        b_shard = shd.to_shardings(mesh, b_specs)
+        return step, (params_sds, batch), (p_shard, b_shard), ()
+    # decode
+    step = steps_mod.make_serve_step(cfg)
+    (caches, token, pos), (c_specs, t_spec, pos_spec) = \
+        specs_mod.cell_specs(cfg, shape_name, mesh)
+    c_shard = shd.to_shardings(mesh, c_specs)
+    t_shard = shd.to_shardings(mesh, t_spec)
+    pos_shard = shd.to_shardings(mesh, pos_spec)
+    args = (params_sds, caches, token, pos)
+    return step, args, (p_shard, c_shard, t_shard, pos_shard), (1,)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             variant: str = "base", hlo_out: Path = None) -> dict:
+    multi_pod = mesh_name == "pod2"
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, donate = build_cell(arch, shape_name, mesh, variant)
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_d[k] = getattr(mem, k, None)
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "transcendentals",
+               "bytes accessed output", "optimal_seconds")}
+    hlo = compiled.as_text()
+    if hlo_out is not None:                 # keep for offline re-analysis
+        with gzip.open(hlo_out, "wt") as f:
+            f.write(hlo)
+    coll = collective_bytes(hlo)            # naive (body-once) counting
+    walked = hlo_parse.analyze(hlo)         # trip-count-aware structural walk
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant,
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d,
+        "cost": cost_d,                     # XLA's (while bodies once)
+        "walk": {                           # structural (trip-aware), /chip
+            "flops": walked.flops,
+            "bytes": walked.bytes,
+            "coll_bytes": walked.coll_bytes,
+            "coll_counts": walked.coll_counts,
+            "coll_total": walked.total_coll_bytes,
+            "notes": walked.notes[:20],
+        },
+        "collectives": coll,
+        "hlo_bytes": len(hlo),
+        "ok": True,
+    }
+
+
+def cells_for(arch: str):
+    cfg = configs.get(arch)
+    return [s for s in cfg.shapes]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["pod1", "pod2",
+                                                       "both"])
+    ap.add_argument("--variant", default="base", choices=list(VARIANTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    if args.all:
+        todo = [(a, s) for a in configs.ARCH_NAMES for s in cells_for(a)]
+    else:
+        assert args.arch and args.shape
+        todo = [(configs.ALIASES.get(args.arch, args.arch), args.shape)]
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    suffix = "" if args.variant == "base" else f"__{args.variant}"
+    for arch, shape in todo:
+        for mesh_name in meshes:
+            out = RESULTS / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+            if args.skip_existing and out.exists():
+                prev = json.loads(out.read_text())
+                if prev.get("ok"):
+                    print(f"[skip] {arch} {shape} {mesh_name}")
+                    continue
+            print(f"[cell] {arch} {shape} {mesh_name} {args.variant} ...",
+                  flush=True)
+            try:
+                res = run_cell(arch, shape, mesh_name, args.variant,
+                               hlo_out=out.with_suffix(".hlo.gz"))
+                print(f"  ok: compile {res['compile_s']}s  "
+                      f"flops={res['cost'].get('flops', 0):.3e}  "
+                      f"coll={res['collectives']['total_bytes']:.3e}B",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 - record failures
+                res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "ok": False, "error": str(e)[-4000:],
+                       "traceback": traceback.format_exc()[-8000:]}
+                n_fail += 1
+                print(f"  FAIL: {str(e)[:200]}", flush=True)
+            out.write_text(json.dumps(res, indent=2))
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

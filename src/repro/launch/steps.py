@@ -1,0 +1,85 @@
+"""Step functions: train_step / prefill_step / serve_step.
+
+These are the functions the dry-run lowers and the real launchers jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import LM
+from ..models.config import ModelConfig
+from ..optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[adamw.AdamWConfig]
+                    = None, accum: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``accum`` > 1 splits the batch into microbatches and
+    accumulates gradients in a lax.scan (for memory-bound cells)."""
+    lm = LM(cfg)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:]), b)
+
+            micro_batches = micro(batch)
+
+            def body(carry, mb):
+                acc_g, acc_l = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), m
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        params, opt_state, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Inference forward over the full sequence -> last-token logits."""
+    lm = LM(cfg)
+
+    def prefill_step(params, batch):
+        x = lm._embed(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        x, _ = lm._backbone(params, x, positions, batch)
+        from ..models import layers
+        x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = lm._unembed(params, x[:, -1:, :])
+        return logits[:, 0, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, caches, token, pos) -> (logits, caches)."""
+    lm = LM(cfg)
+
+    def serve_step(params, caches, token, pos):
+        return lm.decode_step(params, caches, token, pos)
+
+    return serve_step

@@ -1,0 +1,9 @@
+"""Composable pure-JAX model definitions for the assigned architectures.
+
+Parameters are nested dicts of jnp arrays; every module exposes
+``init_*`` (parameter construction) and ``apply``-style pure functions.
+Layer stacks run under ``lax.scan`` with per-layer ``jax.checkpoint`` so
+that HLO size and compile time stay bounded for 40-60 layer models.
+"""
+from .config import ModelConfig, ShapeSpec  # noqa: F401
+from .lm import LM  # noqa: F401

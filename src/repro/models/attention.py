@@ -1,0 +1,363 @@
+"""GQA attention with RoPE, qk-norm, sliding windows, cross-attention and
+a pluggable kernel implementation.
+
+TP-alignment notes (see DESIGN.md §7):
+
+* Query heads can be *padded* (``pad_q_heads``) to a multiple of the TP
+  degree (yi-34b: 56 -> 64).  Padded heads are real compute but their
+  output-projection rows are zero-initialised, so they are exact no-ops
+  functionally; the waste is visible (honestly) in the MODEL_FLOPS /
+  HLO_FLOPs ratio.
+* KV heads are *replicated* (``kv_repeat``) after projection so the KV
+  cache shards evenly over the model axis (MaxText-style replication).
+* The KV cache can be stored in int8 (``cache_dtype``) with per-(token,
+  head) scales — needed for yi-34b decode_32k to fit HBM, and a
+  beyond-paper §Perf lever elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array                 # [B, Smax, H_eff, Dh]  (cache dtype)
+    v: jax.Array
+    pos: jax.Array               # int32[Smax] absolute position per slot
+                                 # (-1 = empty).  Supports both linear and
+                                 # ring-buffer (sliding-window) caches.
+    k_scale: Optional[jax.Array]  # [B, Smax, H_eff, 1] fp32 for int8 cache
+    v_scale: Optional[jax.Array]
+
+
+def effective_kv_heads(cfg: ModelConfig, kv_repeat: int) -> int:
+    return cfg.n_kv_heads * kv_repeat
+
+
+def attn_init(key: jax.Array, cfg: ModelConfig, *, pad_q_heads: int = 0,
+              cross: bool = False) -> Params:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq = pad_q_heads or cfg.n_heads
+    hkv = cfg.n_kv_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, hq * dh, dt),
+        "wk": layers.dense_init(ks[1], d, hkv * dh, dt),
+        "wv": layers.dense_init(ks[2], d, hkv * dh, dt),
+        "wo": layers.dense_init(ks[3], hq * dh, d, dt,
+                                scale=(hq * dh) ** -0.5),
+    }
+    if pad_q_heads and pad_q_heads > cfg.n_heads:
+        # zero the o-proj rows of padded heads: they become exact no-ops
+        dead = jnp.arange(hq) >= cfg.n_heads
+        mask = jnp.repeat(~dead, dh)[:, None]
+        p["wo"] = (p["wo"] * mask).astype(dt)
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(dh, dt)
+        p["k_norm"] = layers.rmsnorm_init(dh, dt)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+               kv_repeat: int = 1, cache_dtype: str = "bfloat16"
+               ) -> KVCache:
+    h = effective_kv_heads(cfg, kv_repeat)
+    dh = cfg.head_dim
+    dt = jnp.dtype(cache_dtype)
+    shape = (batch, max_seq, h, dh)
+    pos = jnp.full((max_seq,), -1, jnp.int32)
+    if dt == jnp.int8:
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            pos=pos,
+            k_scale=jnp.ones((batch, max_seq, h, 1), jnp.float32),
+            v_scale=jnp.ones((batch, max_seq, h, 1), jnp.float32))
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+                   pos=pos, k_scale=None, v_scale=None)
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequant(q: jax.Array, scale: Optional[jax.Array], dtype) -> jax.Array:
+    if scale is None:
+        return q.astype(dtype)
+    # dequantise directly in the compute dtype: halves the HBM traffic of
+    # the dequant intermediates vs fp32 (§Perf: yi-34b decode lever)
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jax.Array,
+                 xs: Optional[jax.Array], positions: jax.Array,
+                 src_positions: Optional[jax.Array], kv_repeat: int,
+                 rope: bool) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns q [B,S,Hq,Dh], k/v [B,T,H_eff,Dh] (xs = cross source)."""
+    dh = cfg.head_dim
+    src = x if xs is None else xs
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    q = q.reshape(*q.shape[:-1], -1, dh)
+    k = jnp.einsum("btd,dh->bth", src, p["wk"])
+    k = k.reshape(*k.shape[:-1], -1, dh)
+    v = jnp.einsum("btd,dh->bth", src, p["wv"])
+    v = v.reshape(*v.shape[:-1], -1, dh)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if src_positions is None else src_positions
+        k = layers.apply_rope(k, kpos, cfg.rope_theta)
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    return q, k, v
+
+
+def _pin(x: jax.Array, axes) -> jax.Array:
+    """with_sharding_constraint that no-ops without an ambient mesh and
+    drops axes that do not divide (smoke tests, odd shapes)."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or "model" not in getattr(am, "axis_names", ()):
+        return x
+    sizes = dict(zip(am.axis_names, am.axis_sizes))
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        if all(a in sizes for a in names):
+            n = 1
+            for a in names:
+                n *= sizes[a]
+            spec.append(ax if dim % n == 0 else None)
+        else:
+            spec.append(None)
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _dax():
+    am = jax.sharding.get_abstract_mesh()
+    names = getattr(am, "axis_names", ()) if am is not None else ()
+    return tuple(a for a in ("pod", "data") if a in names) or None
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, window: int, positions_q: jax.Array,
+                  positions_k: jax.Array, bq: int, bk: int) -> jax.Array:
+    """Flash-style attention in pure jnp: nested scans over (q, k) blocks
+    with online-softmax carries — no [S, T] score materialisation in the
+    HLO.  This is the XLA twin of ``kernels/flash_attention.py`` (which
+    replaces it on real TPU); the inner body is rematerialised so the
+    backward pass recomputes block scores instead of saving them.
+
+    q [B,S,Hq,Dh], k/v [B,T,Hkv,Dh] -> [B, S, Hq*Dh].
+    """
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0
+    scale = dh ** -0.5
+    dax = _dax()
+    qg = q.reshape(b, s, hkv, g, dh)
+    nq, nk = s // bq, t // bk
+    # pin batch over (pod, data) and kv heads over model so GSPMD keeps
+    # the blocked loops sharded instead of replicating the carries
+    q_blocks = _pin(jnp.moveaxis(
+        qg.reshape(b, nq, bq, hkv, g, dh), 1, 0),        # [nq,b,bq,k,g,d]
+        (None, dax, None, "model", None, None))
+    pq_blocks = positions_q.reshape(nq, bq)
+    k_blocks = _pin(jnp.moveaxis(
+        k.reshape(b, nk, bk, hkv, dh), 1, 0),            # [nk,b,bk,k,d]
+        (None, dax, None, "model", None))
+    v_blocks = _pin(jnp.moveaxis(
+        v.reshape(b, nk, bk, hkv, dh), 1, 0),
+        (None, dax, None, "model", None))
+    pk_blocks = positions_k.reshape(nk, bk)
+
+    def q_block_fn(qb, pq):
+        qb32 = qb.astype(jnp.float32)
+
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, pk = inp
+            s_ = jnp.einsum("bqkgd,btkd->bkgqt", qb32,
+                            kb.astype(jnp.float32)) * scale
+            valid = jnp.ones((bq, bk), bool)
+            if causal:
+                valid &= pq[:, None] >= pk[None, :]
+            if window:
+                valid &= pq[:, None] - pk[None, :] < window
+            s_ = jnp.where(valid[None, None, None], s_, -1e30)
+            m_new = jnp.maximum(m, s_.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s_ - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vb.astype(jnp.float32))
+            pin4 = lambda t: _pin(t, (dax, "model", None, None))
+            pin5 = lambda t: _pin(t, (dax, "model", None, None, None))
+            return (pin4(m_new), pin4(l_new), pin5(acc_new)), None
+
+        m0 = _pin(jnp.full((b, hkv, g, bq), -1e30, jnp.float32),
+                  (dax, "model", None, None))
+        l0 = _pin(jnp.zeros((b, hkv, g, bq), jnp.float32),
+                  (dax, "model", None, None))
+        a0 = _pin(jnp.zeros((b, hkv, g, bq, dh), jnp.float32),
+                  (dax, "model", None, None, None))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (k_blocks, v_blocks, pk_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # [b,k,g,bq,d]
+        return jnp.moveaxis(out, 3, 1)                   # [b,bq,k,g,d]
+
+    outs = jax.lax.map(lambda args: q_block_fn(*args),
+                       (q_blocks, pq_blocks))            # [nq,b,bq,k,g,d]
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, hq * dh)
+    return out.astype(q.dtype)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array], compute_dtype) -> jax.Array:
+    """Grouped scaled-dot-product attention (reference implementation).
+
+    q [B,S,Hq,Dh], k/v [B,T,Hkv,Dh] with Hq = G * Hkv.
+    mask broadcastable to [B, 1, 1, S, T] (True = attend).
+    """
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (dh ** -0.5)
+    if mask is not None:
+        # mask [B,1,1,S,T] aligns with [B,K,G,S,T]
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(b, s, hq * dh)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *,
+              kv_repeat: int = 1,
+              xs: Optional[jax.Array] = None,
+              src_positions: Optional[jax.Array] = None,
+              cache: Optional[KVCache] = None,
+              cache_pos: Optional[jax.Array] = None,
+              return_cache: bool = False,
+              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+              impl: str = "ref") -> Tuple[jax.Array, Optional[KVCache]]:
+    """Self/cross attention.
+
+    * training / prefill: full sequence, cache optionally *written*
+      (prefill) and returned.
+    * decode: x is [B, 1, d]; ``cache`` holds the past, ``cache_pos`` is
+      the write position (scalar).
+    * ``kv_override``: precomputed (k, v) [B, T, H_eff, Dh] — used for
+      cross-attention decode against a static source (image tokens).
+    """
+    if kv_override is not None:
+        dh = cfg.head_dim
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+        q = q.reshape(*q.shape[:-1], -1, dh)
+        if cfg.qk_norm:
+            q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k, v = kv_override
+        out = _sdpa(q, k, v, None, cfg.compute_dtype)
+        return jnp.einsum("bsh,hd->bsd", out.astype(x.dtype), p["wo"]), None
+    cross = xs is not None
+    rope = not cross                      # cross-attn layers skip RoPE
+    q, k, v = _project_qkv(p, cfg, x, xs, positions, src_positions,
+                           kv_repeat, rope)
+    b, s = x.shape[0], x.shape[1]
+    new_cache = None
+
+    if cache is not None and cache_pos is not None and s == 1:
+        # --- decode step ---------------------------------------------------
+        # ``positions`` holds the absolute position of the new token; the
+        # write slot is ``cache_pos`` (== position for linear caches,
+        # position % window for ring-buffer sliding-window caches).  The
+        # attention mask comes from the per-slot absolute positions stored
+        # in the cache, which handles both layouts uniformly.
+        abs_pos = positions.reshape(())[None].astype(jnp.int32)  # [1]
+        slot = cache_pos
+        new_pos = jax.lax.dynamic_update_slice(cache.pos, abs_pos, (slot,))
+        quant = cache.k.dtype == jnp.int8
+        if quant:
+            kq, ks = _quantize(k)
+            vq, vs = _quantize(v)
+            ck = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache.k_scale, ks,
+                                               (0, slot, 0, 0))
+            cvs = jax.lax.dynamic_update_slice(cache.v_scale, vs,
+                                               (0, slot, 0, 0))
+            new_cache = KVCache(ck, cv, new_pos, cks, cvs)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+            new_cache = KVCache(ck, cv, new_pos, None, None)
+        valid = (new_cache.pos >= 0) & (new_cache.pos <= abs_pos[0])
+        if cfg.sliding_window:
+            valid &= new_cache.pos > abs_pos[0] - cfg.sliding_window
+        mask = valid[None, None, None, None, :]              # [1,1,1,1,T]
+        kk = _dequant(new_cache.k, new_cache.k_scale, q.dtype)
+        vv = _dequant(new_cache.v, new_cache.v_scale, q.dtype)
+        out = _sdpa(q, kk, vv, mask, cfg.compute_dtype)
+    elif cfg.attn_impl == "chunked" and not cross:
+        # --- flash-style blocked attention (perf lever, §Perf) ---
+        pos_q = jnp.broadcast_to(positions.reshape(-1), (s,))
+        out = _sdpa_chunked(
+            q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+            positions_q=pos_q, positions_k=pos_q,
+            bq=cfg.attn_block_q, bk=cfg.attn_block_k)
+        if return_cache:
+            kpos = positions.astype(jnp.int32)
+            new_cache = KVCache(k=k, v=v, pos=jnp.broadcast_to(
+                kpos.reshape(-1), (k.shape[1],)), k_scale=None,
+                v_scale=None)
+        y = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype), p["wo"])
+        return y, new_cache
+    else:
+        # --- full-sequence (train / prefill / encoder / cross) ---
+        t = k.shape[1]
+        if cross or not cfg.causal:
+            mask = None
+        else:
+            qpos = positions[..., :, None]                   # [(B,)S,1]
+            kpos = (positions if src_positions is None
+                    else src_positions)[..., None, :]        # [(B,)1,T]
+            m = qpos >= kpos
+            if cfg.sliding_window:
+                m &= qpos - kpos < cfg.sliding_window
+            # broadcast to [B,1,1,S,T]
+            while m.ndim < 3:
+                m = m[None]
+            mask = m[:, None, None, :, :]
+        out = _sdpa(q, k, v, mask, cfg.compute_dtype)
+        if return_cache:
+            kpos = (positions if src_positions is None
+                    else src_positions).astype(jnp.int32)
+            new_cache = KVCache(k=k, v=v, pos=jnp.broadcast_to(
+                kpos.reshape(-1), (k.shape[1],)), k_scale=None, v_scale=None)
+
+    y = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype), p["wo"])
+    return y, new_cache

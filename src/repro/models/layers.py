@@ -1,0 +1,150 @@
+"""Building blocks: norms, RoPE, linear/embedding initialisers.
+
+Parameters are plain dicts.  Every initialiser takes an explicit PRNG key
+and returns arrays in ``cfg.param_dtype``; compute happens in
+``cfg.compute_dtype`` with fp32 accumulation where it matters (norms,
+softmax, losses).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype,
+               scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out),
+                                    jnp.float32) * scale
+    return w.astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (vocab, d),
+                                    jnp.float32) * (d ** -0.5)
+    return w.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * g.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, fp32 [head_dim // 2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)                       # [Dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, Dh/2]
+    sin = jnp.sin(ang)[..., :, None, :]                      # [..., S, 1, Dh/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d: int, f: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d, f, dtype),
+        "wi_up": dense_init(k2, d, f, dtype),
+        "wo": dense_init(k3, f, d, dtype, scale=f ** -0.5),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, p["wi_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def chunked_cross_entropy(x: jax.Array, head: jax.Array,
+                          labels: jax.Array, chunk: int,
+                          mask: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """CE over sequence chunks without materialising [B, S, V] logits.
+
+    x [B, S, d] final hidden states, head [d, V].  A remat'd scan over
+    S/chunk blocks computes each block's logits, its logsumexp and the
+    label logit, then discards the block — peak logits memory drops from
+    S x V to chunk x V (the §Perf lever for wide-vocab models).
+    """
+    b, s, d = x.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+    xb = jnp.moveaxis(x.reshape(b, n, c, d), 1, 0)
+    lb = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+    mb = (jnp.moveaxis(mask.reshape(b, n, c), 1, 0) if mask is not None
+          else jnp.ones((n, b, c), jnp.float32))
+
+    @jax.checkpoint
+    def step(carry, inp):
+        nll_sum, count = carry
+        xc, lc, mc = inp
+        logits = jnp.einsum("bcd,dv->bcv", xc, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mc
+        return (nll_sum + nll.sum(), count + mc.sum()), None
+
+    (nll_sum, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xb, lb, mb))
+    return nll_sum / jnp.maximum(count, 1.0), count
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Token-level CE in fp32.  logits [..., V], labels [...] int32.
+    Returns (mean loss, token count)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        count = mask.sum()
+    else:
+        count = jnp.array(nll.size, jnp.float32)
+    return nll.sum() / jnp.maximum(count, 1.0), count

@@ -1,0 +1,461 @@
+"""Unified language model: init / loss / prefill / decode for every
+assigned architecture family.
+
+Families and their backbone structure (see DESIGN.md §5):
+
+  dense   [attn + mlp] x L                       (yi, llama3.2, qwen3,
+                                                  stablelm)
+  moe     every ``moe_every``-th block MoE       (dbrx: all, llama4:
+                                                  alternating dense/MoE)
+  vlm     groups of self blocks + 1 gated cross  (llama3.2-vision:
+                                                  32 self + 8 cross)
+  audio   encoder-only dense, frame inputs       (hubert)
+  rwkv    [time-mix + channel-mix] x L           (rwkv6)
+  hybrid  mamba2 stacks + shared attn block      (zamba2)
+
+Stacks are ``lax.scan`` over vmapped-stacked params; blocks are wrapped
+in ``jax.checkpoint`` per ``cfg.remat_policy``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import layers, rwkv as rwkv_mod, ssm as ssm_mod
+from . import transformer as tf
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(key, 8)
+        p: Params = {
+            "ln_f": layers.rmsnorm_init(cfg.d_model, dt),
+        }
+        if cfg.family == "audio":
+            p["in_proj"] = layers.dense_init(keys[0], cfg.d_model,
+                                             cfg.d_model, dt)
+        else:
+            p["embed"] = layers.embed_init(keys[0], cfg.vocab, cfg.d_model,
+                                           dt)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = layers.dense_init(keys[1], cfg.d_model, cfg.vocab,
+                                             dt)
+
+        L = cfg.n_layers
+        if cfg.family in ("dense", "audio"):
+            p["blocks"] = tf.stack_init(
+                keys[2], L, lambda k: tf.dense_block_init(k, cfg))
+        elif cfg.family == "moe":
+            if cfg.moe_every == 1:
+                p["blocks"] = tf.stack_init(
+                    keys[2], L, lambda k: tf.moe_block_init(k, cfg))
+            else:
+                assert cfg.moe_every == 2 and L % 2 == 0
+                p["dense_blocks"] = tf.stack_init(
+                    keys[2], L // 2,
+                    lambda k: tf.dense_block_init(k, cfg,
+                                                  d_ff=cfg.d_ff_dense))
+                p["moe_blocks"] = tf.stack_init(
+                    keys[3], L // 2, lambda k: tf.moe_block_init(k, cfg))
+        elif cfg.family == "vlm":
+            every = cfg.cross_attn_every
+            n_cross = L // every
+            n_self = L - n_cross
+            per_group = every - 1
+            assert n_self == n_cross * per_group
+            self_stack = tf.stack_init(
+                keys[2], n_self, lambda k: tf.dense_block_init(k, cfg))
+            p["self_blocks"] = jax.tree.map(
+                lambda a: a.reshape(n_cross, per_group, *a.shape[1:]),
+                self_stack)
+            p["cross_blocks"] = tf.stack_init(
+                keys[3], n_cross, lambda k: tf.cross_block_init(k, cfg))
+        elif cfg.family == "rwkv":
+            p["blocks"] = tf.stack_init(
+                keys[2], L, lambda k: tf.rwkv_block_init(k, cfg))
+        elif cfg.family == "hybrid":
+            every = cfg.hybrid_attn_every
+            n_groups = L // every
+            tail = L - n_groups * every
+            stack = tf.stack_init(
+                keys[2], n_groups * every,
+                lambda k: tf.mamba_block_init(k, cfg))
+            p["mamba_groups"] = jax.tree.map(
+                lambda a: a.reshape(n_groups, every, *a.shape[1:]), stack)
+            if tail:
+                p["mamba_tail"] = tf.stack_init(
+                    keys[3], tail, lambda k: tf.mamba_block_init(k, cfg))
+            p["shared_attn"] = tf.shared_attn_block_init(keys[4], cfg)
+        else:
+            raise ValueError(cfg.family)
+        return p
+
+    # ------------------------------------------------------------------
+    # input embedding / unembedding
+    # ------------------------------------------------------------------
+    def _embed(self, p: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = batch["frames"].astype(jnp.dtype(cfg.compute_dtype))
+            return jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+        return jnp.take(p["embed"], batch["tokens"], axis=0)
+
+    def _unembed(self, p: Params, x: jax.Array) -> jax.Array:
+        head = (p["embed"].T if self.cfg.tie_embeddings else p["lm_head"])
+        return jnp.einsum("bsd,dv->bsv", x, head)
+
+    # ------------------------------------------------------------------
+    # backbones (training / full sequence)
+    # ------------------------------------------------------------------
+    def _backbone(self, p: Params, x: jax.Array, positions: jax.Array,
+                  batch: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+
+        def pin(y):
+            if cfg.act_constraints:
+                from ..parallel.sharding import constrain_act
+                return constrain_act(y)
+            return y
+
+        x = pin(x)
+        if cfg.family in ("dense", "audio"):
+            def body(carry, lp):
+                y, _ = tf.dense_block(lp, cfg, carry, positions)
+                return pin(y), None
+            x, _ = jax.lax.scan(tf._remat(body, cfg.remat_policy), x,
+                                p["blocks"])
+        elif cfg.family == "moe":
+            if cfg.moe_every == 1:
+                def body(carry, lp):
+                    y, _, a = tf.moe_block(lp, cfg, carry, positions)
+                    return pin(y), a
+                x, auxs = jax.lax.scan(tf._remat(body, cfg.remat_policy), x,
+                                       p["blocks"])
+            else:
+                def body(carry, lp):
+                    lpd, lpm = lp
+                    y, _ = tf.dense_block(lpd, cfg, carry, positions)
+                    y, _, a = tf.moe_block(lpm, cfg, pin(y), positions)
+                    return pin(y), a
+                x, auxs = jax.lax.scan(
+                    tf._remat(body, cfg.remat_policy), x,
+                    (p["dense_blocks"], p["moe_blocks"]))
+            aux = auxs.mean()
+        elif cfg.family == "vlm":
+            img = batch["img"].astype(x.dtype)
+
+            def group(carry, lp):
+                selfs, crossp = lp
+
+                def inner(c, slp):
+                    return tf.dense_block(slp, cfg, c, positions)[0], None
+                y, _ = jax.lax.scan(tf._remat(inner, cfg.remat_policy),
+                                    carry, selfs)
+                y = tf.cross_block(crossp, cfg, y, img, positions)
+                return y, None
+            x, _ = jax.lax.scan(group, x,
+                                (p["self_blocks"], p["cross_blocks"]))
+        elif cfg.family == "rwkv":
+            def body(carry, lp):
+                h, _, _ = rwkv_mod.time_mix_forward(
+                    lp["time"], cfg,
+                    layers.rmsnorm(carry, lp["ln1"], cfg.norm_eps),
+                    pin=pin if cfg.act_constraints else None)
+                y = pin(carry + h)
+                h2, _ = rwkv_mod.channel_mix_forward(
+                    lp["chan"], cfg,
+                    layers.rmsnorm(y, lp["ln2"], cfg.norm_eps))
+                return pin(y + h2), None
+            x, _ = jax.lax.scan(tf._remat(body, cfg.remat_policy), x,
+                                p["blocks"])
+        elif cfg.family == "hybrid":
+            shared = p["shared_attn"]
+
+            def mamba_body(carry, lp):
+                h, _ = ssm_mod.mamba2_forward(
+                    lp["ssm"], cfg,
+                    layers.rmsnorm(carry, lp["ln"], cfg.norm_eps))
+                return carry + h, None
+            mamba_body = tf._remat(mamba_body, cfg.remat_policy)
+
+            def group(carry, lp):
+                y, _ = jax.lax.scan(mamba_body, carry, lp)
+                y, _ = tf.dense_block(shared, cfg, y, positions)
+                return y, None
+            x, _ = jax.lax.scan(group, x, p["mamba_groups"])
+            if "mamba_tail" in p:
+                x, _ = jax.lax.scan(mamba_body, x, p["mamba_tail"])
+        else:
+            raise ValueError(cfg.family)
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # loss (training step objective)
+    # ------------------------------------------------------------------
+    def loss(self, p: Params, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x = self._embed(p, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        x, aux = self._backbone(p, x, positions, batch)
+        x = layers.rmsnorm(x, p["ln_f"], cfg.norm_eps)
+        if cfg.ce_chunk:
+            head = (p["embed"].T if cfg.tie_embeddings else p["lm_head"])
+            ce, count = layers.chunked_cross_entropy(
+                x, head, batch["labels"], cfg.ce_chunk,
+                batch.get("loss_mask"))
+        else:
+            logits = self._unembed(p, x)
+            ce, count = layers.softmax_cross_entropy(
+                logits, batch["labels"], batch.get("loss_mask"))
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux, "tokens": count}
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def cache_len(self, seq_len: int) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window:
+            return min(cfg.sliding_window, seq_len)
+        return seq_len
+
+    def init_caches(self, batch: int, seq_len: int) -> Any:
+        """Zeroed decode caches sized for a context of ``seq_len``."""
+        cfg = self.cfg
+        L = cfg.n_layers
+
+        def stack(n, make):
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n, *a.shape)).copy(),
+                make())
+
+        if cfg.family in ("dense", "moe"):
+            return stack(L, lambda: attn_mod.init_cache(
+                cfg, batch, self.cache_len(seq_len),
+                kv_repeat=cfg.kv_repeat, cache_dtype=cfg.cache_dtype))
+        if cfg.family == "vlm":
+            every = cfg.cross_attn_every
+            n_cross = L // every
+            n_self = L - n_cross
+            h = attn_mod.effective_kv_heads(cfg, cfg.kv_repeat)
+            return {
+                "self": stack(n_self, lambda: attn_mod.init_cache(
+                    cfg, batch, self.cache_len(seq_len),
+                    kv_repeat=cfg.kv_repeat, cache_dtype=cfg.cache_dtype)),
+                "cross_k": jnp.zeros(
+                    (n_cross, batch, cfg.n_img_tokens, h, cfg.head_dim),
+                    jnp.dtype(cfg.compute_dtype)),
+                "cross_v": jnp.zeros(
+                    (n_cross, batch, cfg.n_img_tokens, h, cfg.head_dim),
+                    jnp.dtype(cfg.compute_dtype)),
+            }
+        if cfg.family == "rwkv":
+            return stack(L, lambda: rwkv_mod.init_rwkv_cache(cfg, batch))
+        if cfg.family == "hybrid":
+            every = cfg.hybrid_attn_every
+            n_groups = L // every
+            tail = L - n_groups * every
+            caches = {
+                "mamba_groups": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (n_groups, every, *a.shape)).copy(),
+                    ssm_mod.init_ssm_cache(cfg, batch)),
+                "shared_attn": stack(n_groups, lambda: attn_mod.init_cache(
+                    cfg, batch, self.cache_len(seq_len),
+                    kv_repeat=cfg.kv_repeat, cache_dtype=cfg.cache_dtype)),
+            }
+            if tail:
+                caches["mamba_tail"] = stack(
+                    tail, lambda: ssm_mod.init_ssm_cache(cfg, batch))
+            return caches
+        raise ValueError(f"{cfg.family} has no decode caches")
+
+    # ------------------------------------------------------------------
+    # decode step (one new token against an existing cache)
+    # ------------------------------------------------------------------
+    def decode_step(self, p: Params, caches: Any, token: jax.Array,
+                    pos: jax.Array, batch: Optional[Dict[str, jax.Array]]
+                    = None) -> Tuple[jax.Array, Any]:
+        """token [B, 1] int32, pos scalar int32 -> (logits [B, V], caches).
+
+        The cache write slot is ``pos`` for linear caches and
+        ``pos % window`` for ring-buffer sliding-window caches.
+        """
+        cfg = self.cfg
+        x = jnp.take(p["embed"], token, axis=0)
+        positions = pos[None] if pos.ndim == 0 else pos
+        new_caches = caches
+
+        if cfg.family in ("dense", "moe"):
+            # stacked caches: k is [L, B, S, H, Dh] -> cache length is axis 2
+            slot = self._slot(pos, caches.k.shape[2])
+        if cfg.family == "dense":
+            def body(carry, inp):
+                lp, cache = inp
+                y, nc = tf.dense_block(lp, cfg, carry, positions,
+                                       cache=cache, cache_pos=slot)
+                return y, nc
+            x, new_caches = jax.lax.scan(body, x, (p["blocks"], caches))
+        elif cfg.family == "moe":
+            if cfg.moe_every == 1:
+                def body(carry, inp):
+                    lp, cache = inp
+                    y, nc, _ = tf.moe_block(lp, cfg, carry, positions,
+                                            cache=cache, cache_pos=slot)
+                    return y, nc
+                x, new_caches = jax.lax.scan(body, x, (p["blocks"], caches))
+            else:
+                L2 = cfg.n_layers // 2
+                cd = jax.tree.map(lambda a: a[0::2], caches)
+                cm = jax.tree.map(lambda a: a[1::2], caches)
+
+                def body(carry, inp):
+                    (lpd, lpm), (cached, cachem) = inp
+                    y, ncd = tf.dense_block(lpd, cfg, carry, positions,
+                                            cache=cached, cache_pos=slot)
+                    y, ncm, _ = tf.moe_block(lpm, cfg, y, positions,
+                                             cache=cachem, cache_pos=slot)
+                    return y, (ncd, ncm)
+                x, (ncd, ncm) = jax.lax.scan(
+                    body, x, ((p["dense_blocks"], p["moe_blocks"]),
+                              (cd, cm)))
+                # re-interleave
+                new_caches = jax.tree.map(
+                    lambda a, b: jnp.stack([a, b], axis=1).reshape(
+                        cfg.n_layers, *a.shape[1:]), ncd, ncm)
+        elif cfg.family == "vlm":
+            slot = self._slot(pos, caches["self"].k.shape[2])
+            every = cfg.cross_attn_every
+            per_group = every - 1
+            n_cross = cfg.n_layers // every
+            sc = jax.tree.map(
+                lambda a: a.reshape(n_cross, per_group, *a.shape[1:]),
+                caches["self"])
+
+            def group(carry, inp):
+                (selfs, crossp), (scache, ck, cv) = inp
+
+                def inner(c, inp2):
+                    slp, cache1 = inp2
+                    y, nc = tf.dense_block(slp, cfg, c, positions,
+                                           cache=cache1, cache_pos=slot)
+                    return y, nc
+                y, nsc = jax.lax.scan(inner, carry, (selfs, scache))
+                h, _ = attn_mod.attention(
+                    crossp["xattn"], cfg,
+                    layers.rmsnorm(y, crossp["ln1"], cfg.norm_eps),
+                    positions, kv_override=(ck, cv))
+                y = y + jnp.tanh(crossp["gate_attn"]).astype(y.dtype) * h
+                m = layers.mlp_apply(
+                    crossp["mlp"],
+                    layers.rmsnorm(y, crossp["ln2"], cfg.norm_eps))
+                y = y + jnp.tanh(crossp["gate_mlp"]).astype(y.dtype) * m
+                return y, nsc
+            x, nsc = jax.lax.scan(
+                group, x,
+                ((p["self_blocks"], p["cross_blocks"]),
+                 (sc, caches["cross_k"], caches["cross_v"])))
+            new_caches = dict(caches)
+            new_caches["self"] = jax.tree.map(
+                lambda a: a.reshape(cfg.n_layers - n_cross, *a.shape[2:]),
+                nsc)
+        elif cfg.family == "rwkv":
+            def body(carry, inp):
+                lp, cache = inp
+                h, state, last_t = rwkv_mod.time_mix_decode(
+                    lp["time"], cfg,
+                    layers.rmsnorm(carry, lp["ln1"], cfg.norm_eps),
+                    cache.shift_t, cache.state)
+                y = carry + h
+                xn = layers.rmsnorm(y, lp["ln2"], cfg.norm_eps)
+                h2, last_c = rwkv_mod.channel_mix_forward(
+                    lp["chan"], cfg, xn, cache_shift=cache.shift_c)
+                nc = rwkv_mod.RWKVCache(shift_t=last_t, shift_c=last_c,
+                                        state=state)
+                return y + h2, nc
+            x, new_caches = jax.lax.scan(body, x, (p["blocks"], caches))
+        elif cfg.family == "hybrid":
+            shared = p["shared_attn"]
+            w = caches["shared_attn"].k.shape[2]
+            slot = self._slot(pos, w)
+
+            def mamba_body(carry, inp):
+                lp, cache = inp
+                h, nc = ssm_mod.mamba2_decode(
+                    lp["ssm"], cfg,
+                    layers.rmsnorm(carry, lp["ln"], cfg.norm_eps), cache)
+                return carry + h, nc
+
+            def group(carry, inp):
+                lp, (mcache, acache) = inp
+                y, nmc = jax.lax.scan(mamba_body, carry, (lp, mcache))
+                y, nac = tf.dense_block(shared, cfg, y, positions,
+                                        cache=acache, cache_pos=slot)
+                return y, (nmc, nac)
+            x, (nmg, nag) = jax.lax.scan(
+                group, x, (p["mamba_groups"],
+                           (caches["mamba_groups"], caches["shared_attn"])))
+            new_caches = dict(caches)
+            new_caches["mamba_groups"] = nmg
+            new_caches["shared_attn"] = nag
+            if "mamba_tail" in p:
+                x, nmt = jax.lax.scan(mamba_body, x,
+                                      (p["mamba_tail"],
+                                       caches["mamba_tail"]))
+                new_caches["mamba_tail"] = nmt
+        else:
+            raise ValueError(f"{cfg.family} does not decode")
+
+        x = layers.rmsnorm(x, p["ln_f"], cfg.norm_eps)
+        logits = self._unembed(p, x)[:, 0, :]
+        return logits, new_caches
+
+    def _slot(self, pos: jax.Array, cache_size: int) -> jax.Array:
+        if self.cfg.sliding_window and cache_size <= self.cfg.sliding_window:
+            return (pos % cache_size).astype(jnp.int32)
+        return pos.astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # prefill: full-sequence forward that also fills decode caches
+    # ------------------------------------------------------------------
+    def prefill(self, p: Params, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Any]:
+        """Returns (last-token logits [B, V], caches ready for decode).
+
+        Supported for dense-cache families; SSM/hybrid prefill goes
+        through the chunked forward with cache return (see examples).
+        """
+        cfg = self.cfg
+        x = self._embed(p, batch)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.arange(s)
+        if cfg.family == "dense":
+            def body(carry, lp):
+                y, nc = tf.dense_block(lp, cfg, carry, positions,
+                                       return_cache=True)
+                return y, nc
+            x, raw = jax.lax.scan(body, x, p["blocks"])
+            caches = raw                       # stacked [L, ...] KVCache
+            x = layers.rmsnorm(x, p["ln_f"], cfg.norm_eps)
+            logits = self._unembed(p, x[:, -1:, :])[:, 0, :]
+            return logits, caches
+        raise NotImplementedError(
+            f"prefill for family {cfg.family} lives in examples/serve_batch")

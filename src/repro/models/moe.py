@@ -1,0 +1,105 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+TPU-native dispatch (no ragged ops): tokens are routed with a stable sort
+by expert id, each expert processes a fixed-capacity [E, C, d] block
+(tokens over capacity are dropped — standard GShard/Switch semantics,
+capacity_factor controls the drop rate), and outputs are combined with
+the router gate weights.  Experts shard over the ``model`` axis (EP); the
+[E, C, d] dispatch tensor resharding induces the all-to-all.
+
+Optional shared expert (llama4-style) runs densely next to the routed
+experts.  An auxiliary load-balance loss (Switch-style) is returned for
+training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, *,
+             shared_expert: bool = False) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, jnp.float32),
+        "wi_gate": jax.random.truncated_normal(
+            ks[1], -3.0, 3.0, (e, d, f), jnp.float32).astype(dt) * (d ** -0.5),
+        "wi_up": jax.random.truncated_normal(
+            ks[2], -3.0, 3.0, (e, d, f), jnp.float32).astype(dt) * (d ** -0.5),
+        "wo": jax.random.truncated_normal(
+            ks[3], -3.0, 3.0, (e, f, d), jnp.float32).astype(dt) * (f ** -0.5),
+    }
+    if shared_expert:
+        p["shared"] = layers.mlp_init(ks[4], d, f, dt)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)      # pad to multiple of 8
+
+
+def moe_apply(p: Params, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # [n, e]
+    gate, expert = jax.lax.top_k(probs, k)                     # [n, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss
+    density = jnp.mean(jax.nn.one_hot(expert[:, 0], e), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = (density * density_proxy).sum() * (e ** 2) / e
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_expert = expert.reshape(-1)                           # [n*k]
+    order = jnp.argsort(flat_expert, stable=True)              # [n*k]
+    sorted_expert = flat_expert[order]
+    # position of each routed token within its expert block
+    ones = jnp.ones_like(sorted_expert)
+    pos_in_expert = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e), side="left")
+    pos_in_expert = pos_in_expert - seg_start[sorted_expert]
+    keep = pos_in_expert < c
+    slot = jnp.where(keep, sorted_expert * c + pos_in_expert, e * c)
+
+    token_id = order // k                                      # [n*k]
+    # scatter tokens into [e*c(+1 overflow), d]
+    dispatch = jnp.zeros((e * c + 1, d), x.dtype)
+    dispatch = dispatch.at[slot].set(xf[token_id], mode="drop",
+                                     unique_indices=False)
+    xe = dispatch[: e * c].reshape(e, c, d)                    # [e, c, d]
+
+    # ---- expert MLPs (einsum over per-expert blocks) --------------------
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])                # [e, c, d]
+
+    # ---- combine ---------------------------------------------------------
+    ye_flat = jnp.concatenate(
+        [ye.reshape(e * c, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+    routed = ye_flat[slot]                                     # [n*k, d]
+    w = (gate.reshape(-1)[order] * keep).astype(x.dtype)       # [n*k]
+    contrib = routed * w[:, None]
+    y = jnp.zeros((n, d), x.dtype).at[token_id].add(contrib)
+
+    if "shared" in p:
+        y = y + layers.mlp_apply(p["shared"], xf)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

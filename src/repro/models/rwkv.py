@@ -1,0 +1,276 @@
+"""RWKV6 "Finch" blocks (attention-free, data-dependent decay).
+
+Faithful to arXiv:2404.05892 structure:
+
+* time-mixing with data-dependent token-shift interpolation (ddlerp via a
+  low-rank "mix LoRA"),
+* per-channel data-dependent decay ``w = exp(-exp(w0 + lora_w(x)))``,
+* per-head WKV state recurrence with bonus term ``u``:
+      out_t = r_t @ (diag(u) k_t^T v_t + S_{t-1})
+      S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+* gated output through GroupNorm-style per-head RMSNorm,
+* squared-ReLU channel mixing with receptance gate.
+
+Train/prefill use a chunked formulation: within a chunk of length Q the
+WKV output is a masked [Q, Q] quadratic form (MXU matmuls); the state is
+carried across chunks by ``lax.scan``.  Decode is an O(1) update.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+class RWKVCache(NamedTuple):
+    shift_t: jax.Array   # [B, 1, d] last token (time-mix shift)
+    shift_c: jax.Array   # [B, 1, d] last token (channel-mix shift)
+    state: jax.Array     # [B, H, dk, dv] fp32 WKV state
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    """WKV head count, optionally padded for even TP sharding (padded
+    heads have zeroed output rows -> exact no-ops, like q-head padding)."""
+    base = cfg.d_model // cfg.rwkv_head_dim
+    return max(base, cfg.rwkv_pad_heads)
+
+
+def wkv_width(cfg: ModelConfig) -> int:
+    return n_heads(cfg) * cfg.rwkv_head_dim
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> RWKVCache:
+    d = cfg.d_model
+    h, k = n_heads(cfg), cfg.rwkv_head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    return RWKVCache(
+        shift_t=jnp.zeros((batch, 1, d), dt),
+        shift_c=jnp.zeros((batch, 1, d), dt),
+        state=jnp.zeros((batch, h, k, k), jnp.float32),
+    )
+
+
+def time_mix_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dw = wkv_width(cfg)              # padded WKV width (>= d)
+    dt = jnp.dtype(cfg.param_dtype)
+    r = cfg.rwkv_lora_w
+    rm = cfg.rwkv_lora_mix
+    ks = jax.random.split(key, 12)
+    wo = layers.dense_init(ks[6], dw, d, dt, scale=dw ** -0.5)
+    if dw > d:                       # zero dead-head output rows: exact no-op
+        dead = jnp.arange(dw) >= d
+        wo = (wo * ~dead[:, None]).astype(dt)
+    return {
+        "mu_x": jnp.full((d,), 0.5, dt),
+        # ddlerp mixing: 5 targets (r, k, v, w, g)
+        "mix_A": layers.dense_init(ks[0], d, rm * 5, dt),
+        "mix_B": (jax.random.normal(ks[1], (5, rm, d), jnp.float32)
+                  * 0.01).astype(dt),
+        "mu_rkvwg": jnp.full((5, d), 0.5, dt),
+        "wr": layers.dense_init(ks[2], d, dw, dt),
+        "wk": layers.dense_init(ks[3], d, dw, dt),
+        "wv": layers.dense_init(ks[4], d, dw, dt),
+        "wg": layers.dense_init(ks[5], d, dw, dt),
+        "wo": wo,
+        # decay: w = exp(-exp(w0 + tanh(x A_w) B_w))
+        "w0": jnp.full((dw,), -6.0, jnp.float32),
+        "wA": layers.dense_init(ks[7], d, r, dt),
+        "wB": (jax.random.normal(ks[8], (r, dw), jnp.float32)
+               * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[9], (dw,), jnp.float32) * 0.1),
+        "ln_g": layers.rmsnorm_init(dw, dt),
+    }
+
+
+def channel_mix_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": layers.dense_init(ks[0], d, f, dt),
+        "wv": layers.dense_init(ks[1], f, d, dt, scale=f ** -0.5),
+        "wr": layers.dense_init(ks[2], d, d, dt),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x_{t-1}; position 0 gets `prev` (or zeros)."""
+    first = (jnp.zeros_like(x[:, :1]) if prev is None else
+             prev.astype(x.dtype))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x: jax.Array, xx: jax.Array) -> jax.Array:
+    """Data-dependent lerp producing the 5 mixed inputs [5, B, S, d]."""
+    base = x + (xx - x) * p["mu_x"]
+    lora = jnp.einsum("bsd,dk->bsk", base, p["mix_A"])
+    lora = jnp.tanh(lora.astype(jnp.float32)).astype(x.dtype)
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)            # [B,S,5,rm]
+    delta = jnp.einsum("bsfr,frd->fbsd", lora, p["mix_B"])  # [5,B,S,d]
+    mu = p["mu_rkvwg"][:, None, None, :] + delta            # [5,B,S,d]
+    return x[None] + (xx - x)[None] * mu
+
+
+def _decay(p: Params, xw: jax.Array) -> jax.Array:
+    """log w_t in (-inf, 0): data-dependent per-channel decay, fp32."""
+    lora = jnp.tanh(jnp.einsum("bsd,dk->bsk", xw, p["wA"]
+                               ).astype(jnp.float32))
+    dd = jnp.einsum("bsk,kd->bsd", lora, p["wB"].astype(jnp.float32))
+    return -jnp.exp(p["w0"] + dd)                            # log-decay <= 0
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array,
+                log_w: jax.Array, u: jax.Array, head_dim: int,
+                state0: Optional[jax.Array] = None, chunk: int = 128,
+                pins: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV.  r/k/v [B,S,d]; log_w [B,S,d] fp32; u [d].
+
+    Returns (out [B,S,d] fp32, final state [B,H,dk,dk] fp32).
+    WKV recurrence per head (dk = dv = head_dim):
+        out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+        S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    from .attention import _dax, _pin as _pin_raw
+    b, s, d = r.shape
+    h = d // head_dim
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    dax = _dax()
+    _pin = _pin_raw if pins else (lambda x, spec: x)
+
+    def resh(x, dtype=jnp.float32):
+        # [nc, b, q, h, hd] with WKV heads pinned over model so the
+        # chunk scan stays sharded (same fix as blocked attention)
+        y = jnp.moveaxis(
+            x.astype(dtype).reshape(b, nc, q, h, head_dim), 1, 0)
+        return _pin(y, (None, dax, None, "model", None))
+
+    rr, kk, vv, ww = resh(r), resh(k), resh(v), resh(log_w)
+    uu = u.reshape(h, head_dim)
+    state0 = (jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+              if state0 is None else state0)
+    state0 = _pin(state0, (dax, "model", None, None))
+
+    def chunk_step(state, inp):
+        rq, kq, vq, wq = inp          # [b,q,h,k]
+        cum = jnp.cumsum(wq, axis=1)  # inclusive cumulative log decay
+        # inter-chunk: out_state[t] = (r_t * exp(cum_{t-1})) @ S
+        cum_excl = cum - wq           # exclusive cumsum
+        r_dec = rq * jnp.exp(cum_excl)
+        y_state = jnp.einsum("bqhk,bhkv->bqhv", r_dec, state)
+        # intra-chunk, strictly lower triangle + diagonal bonus:
+        # A[t,u] = sum_k r[t,k] k[u,k] exp(cum_excl[t] - cum[u]) for u < t.
+        # Per-channel offset c = cum_last/2 centres the two exponentials so
+        # neither overflows fp32 (handles avg |log w| up to ~2.5/step at
+        # chunk 64 — see DESIGN.md numerics notes).
+        c = cum[:, -1:] * 0.5         # [b,1,h,k]
+        r_off = rq * jnp.exp(cum_excl - c)
+        km = kq * jnp.exp(c - cum)    # k scaled toward chunk centre
+        a = jnp.einsum("bqhk,buhk->bqhu", r_off, km)
+        tril = jnp.tril(jnp.ones((q, q), jnp.bool_), k=-1)
+        a = jnp.where(tril[None, :, None, :], a, 0.0)
+        y_intra = jnp.einsum("bqhu,buhv->bqhv", a, vq)
+        # diagonal (bonus) term: r_t diag(u) k_t^T v_t
+        ru = jnp.einsum("bqhk,hk,bqhk->bqh", rq, uu, kq)
+        y_diag = ru[..., None] * vq
+        # state update: S' = diag(exp(cum_last)) S + sum_u exp(cum_last -
+        # cum_u) k_u^T v_u
+        last = cum[:, -1]             # [b,h,k]
+        k_dec = kq * jnp.exp(last[:, None] - cum)
+        ds = jnp.einsum("bqhk,bqhv->bhkv", k_dec, vq)
+        state = _pin(jnp.exp(last)[..., None] * state + ds,
+                     (dax, "model", None, None))
+        out_c = _pin(y_state + y_intra + y_diag,
+                     (dax, None, "model", None))
+        return state, out_c
+
+    final, ys = jax.lax.scan(chunk_step, state0, (rr, kk, vv, ww))
+    out = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+    return out, final
+
+
+def time_mix_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                     cache_shift: Optional[jax.Array] = None,
+                     state0: Optional[jax.Array] = None,
+                     pin=None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y, final_state, last_token) for [B,S,d] input.
+
+    ``cfg.rwkv_wkv_pins``: keeps the widened (WKV) activations model-
+    sharded on their channel dim so GSPMD never round-trips the fp32
+    stream through all-gathers (§Perf lever)."""
+    use_pins = cfg.rwkv_wkv_pins or (pin is not None)
+
+    def pin_w(t):                    # [B, S, dw]: channel dim model-sharded
+        if not use_pins:
+            return t
+        from ..parallel.sharding import constrain_act
+        return constrain_act(t, last_model=True)
+
+    xx = _shift(x, cache_shift)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = pin_w(jnp.einsum("bsd,dk->bsk", xr, p["wr"]))
+    k = pin_w(jnp.einsum("bsd,dk->bsk", xk, p["wk"]))
+    v = pin_w(jnp.einsum("bsd,dk->bsk", xv, p["wv"]))
+    g = pin_w(jnp.einsum("bsd,dk->bsk", xg, p["wg"]))
+    log_w = pin_w(_decay(p, xw))
+    out, state = wkv_chunked(
+        r, k, v, log_w, p["u"], cfg.rwkv_head_dim, state0=state0,
+        pins=use_pins)
+    out = layers.rmsnorm(out.astype(x.dtype), p["ln_g"], cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsd,dk->bsk", out, p["wo"])
+    return y, state, x[:, -1:]
+
+
+def time_mix_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                    shift_t: jax.Array, state: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) decode: x [B,1,d]."""
+    h, hd = n_heads(cfg), cfg.rwkv_head_dim
+    b = x.shape[0]
+    xx = shift_t.astype(x.dtype)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = jnp.einsum("bsd,dk->bsk", xr, p["wr"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dk->bsk", xk, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dk->bsk", xv, p["wv"]).astype(jnp.float32)
+    g = jnp.einsum("bsd,dk->bsk", xg, p["wg"])
+    w = jnp.exp(_decay(p, xw))[:, 0]                       # [b,d]
+    rh = r[:, 0].reshape(b, h, hd)
+    kh = k[:, 0].reshape(b, h, hd)
+    vh = v[:, 0].reshape(b, h, hd)
+    wh = w.reshape(b, h, hd)
+    uh = p["u"].reshape(h, hd)
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    out = jnp.einsum("bhk,bhkv->bhv", rh, state + uh[None, :, :, None] * kv)
+    new_state = wh[..., None] * state + kv
+    out = out.reshape(b, 1, h * hd)
+    out = layers.rmsnorm(out.astype(x.dtype), p["ln_g"], cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsd,dk->bsk", out, p["wo"])
+    return y, new_state, x[:, -1:]
+
+
+def channel_mix_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                        cache_shift: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    xx = _shift(x, cache_shift)
+    xk = x + (xx - x) * p["mu_k"]
+    xr = x + (xx - x) * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    # sigmoid stays in the compute dtype: its saved residual would
+    # otherwise be an fp32 [B,S,d] per layer (§Perf iteration 3)
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", xr, p["wr"]))
+    return (rgate * kv), x[:, -1:]

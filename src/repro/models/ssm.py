@@ -1,0 +1,244 @@
+"""Mamba2 (SSD) block — used by the zamba2 hybrid architecture.
+
+Chunked state-space-duality formulation: within a chunk of length Q the
+output is a masked quadratic form (MXU-friendly [Q, Q] matmuls); across
+chunks a small recurrent state [H, P, N] is carried by a ``lax.scan``.
+Decode is an O(1) single-token state update.
+
+State conventions per head h:
+    h_t = exp(-dt_t * A_h) * h_{t-1} + dt_t * (x_t outer B_t)   [P, N]
+    y_t = (h_t @ C_t) + D_h * x_t
+with dt_t = softplus(dt_raw + dt_bias), A_h = exp(A_log_h) > 0.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+class SSMSpec(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    state: int
+    conv: int
+    chunk: int
+
+
+def spec(cfg: ModelConfig) -> SSMSpec:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    head_dim = cfg.ssm_head_dim or 64
+    n_heads = cfg.ssm_heads or d_inner // head_dim
+    return SSMSpec(d_inner, n_heads, head_dim, cfg.ssm_state,
+                   cfg.ssm_conv, cfg.ssm_chunk)
+
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Projections are SPLIT (wz / wxs / wBC / wdt instead of one fused
+    in_proj) so each weight has a clean TP sharding: head-aligned outputs
+    (wz, wxs, wdt) shard over the model axis, the tiny per-group B/C
+    projection replicates.  XLA fuses the matmuls back together."""
+    sp = spec(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": layers.dense_init(ks[0], d, sp.d_inner, dt),
+        "wxs": layers.dense_init(ks[1], d, sp.d_inner, dt),
+        "wBC": layers.dense_init(ks[2], d, 2 * sp.state, dt),
+        "wdt": layers.dense_init(ks[3], d, sp.n_heads, dt),
+        "conv_xs": (jax.random.normal(ks[4], (sp.conv, sp.d_inner),
+                                      jnp.float32)
+                    * (sp.conv ** -0.5)).astype(dt),
+        "conv_BC": (jax.random.normal(ks[5], (sp.conv, 2 * sp.state),
+                                      jnp.float32)
+                    * (sp.conv ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((sp.d_inner + 2 * sp.state,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, sp.n_heads)
+                         ).astype(jnp.float32),
+        "D": jnp.ones((sp.n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, sp.n_heads))).astype(jnp.float32),
+        "norm_g": layers.rmsnorm_init(sp.d_inner, dt),
+        "out_proj": layers.dense_init(ks[2], sp.d_inner, d, dt,
+                                      scale=sp.d_inner ** -0.5),
+    }
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # [B, conv-1, conv_dim] rolling conv window
+    state: jax.Array   # [B, H, P, N] fp32 recurrent state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    sp = spec(cfg)
+    conv_dim = sp.d_inner + 2 * sp.state
+    return SSMCache(
+        conv=jnp.zeros((batch, sp.conv - 1, conv_dim),
+                       jnp.dtype(cfg.compute_dtype)),
+        state=jnp.zeros((batch, sp.n_heads, sp.head_dim, sp.state),
+                        jnp.float32),
+    )
+
+
+def _split_proj(p: Params, cfg: ModelConfig, x: jax.Array):
+    sp = spec(cfg)
+    z = jnp.einsum("bsd,dk->bsk", x, p["wz"])
+    xs = jnp.einsum("bsd,dk->bsk", x, p["wxs"])
+    bc = jnp.einsum("bsd,dk->bsk", x, p["wBC"])
+    xBC = jnp.concatenate([xs, bc], axis=-1)
+    dt_raw = jnp.einsum("bsd,dk->bsk", x, p["wdt"])
+    return z, xBC, dt_raw
+
+
+def _conv_w(p: Params) -> jax.Array:
+    return jnp.concatenate([p["conv_xs"], p["conv_BC"]], axis=1)
+
+
+def _causal_conv(p: Params, xBC: jax.Array, sp: SSMSpec) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with kernel sp.conv."""
+    w = _conv_w(p)
+    pad = jnp.pad(xBC, ((0, 0), (sp.conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1], :] *
+              w[i][None, None, :] for i in range(sp.conv))
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)
+                       ).astype(xBC.dtype)
+
+
+def _gates(p: Params, dt_raw: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (dt [..., H] fp32, log_a [..., H] fp32 <= 0)."""
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    log_a = -dt * jnp.exp(p["A_log"])
+    return dt, log_a
+
+
+def mamba2_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                   cache: Optional[SSMCache] = None
+                   ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """Full-sequence chunked forward.  x [B, S, d] -> y [B, S, d].
+
+    If ``cache`` is given it provides the initial conv window + state and
+    the final ones are returned (prefill)."""
+    sp = spec(cfg)
+    b, s, _ = x.shape
+    q = min(sp.chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    z, xBC, dt_raw = _split_proj(p, cfg, x)
+    if cache is not None:
+        full = jnp.concatenate([cache.conv, xBC], axis=1)
+        pad_less = full[:, -(s + sp.conv - 1):]
+        xBC_conv = _conv_with_history(p, pad_less, s, sp)
+        new_conv = full[:, -(sp.conv - 1):]
+    else:
+        xBC_conv = _causal_conv(p, xBC, sp)
+        new_conv = xBC[:, -(sp.conv - 1):] if sp.conv > 1 else None
+    xs = xBC_conv[..., : sp.d_inner]
+    B = xBC_conv[..., sp.d_inner: sp.d_inner + sp.state]
+    C = xBC_conv[..., sp.d_inner + sp.state:]
+    dt, log_a = _gates(p, dt_raw)
+
+    h, p_, n = sp.n_heads, sp.head_dim, sp.state
+    xh = xs.reshape(b, s, h, p_)
+    # chunked scan
+    nc = s // q
+    xh_c = xh.reshape(b, nc, q, h, p_)
+    B_c = B.reshape(b, nc, q, n)
+    C_c = C.reshape(b, nc, q, n)
+    dt_c = dt.reshape(b, nc, q, h)
+    la_c = log_a.reshape(b, nc, q, h)
+
+    init = (cache.state if cache is not None
+            else jnp.zeros((b, h, p_, n), jnp.float32))
+
+    def chunk_step(state, inp):
+        xq, Bq, Cq, dtq, laq = inp    # [b,q,h,p], [b,q,n], [b,q,n], [b,q,h]
+        cum = jnp.cumsum(laq, axis=1)                    # [b,q,h]
+        # intra-chunk quadratic: M[t,u] = exp(cum_t - cum_u), u <= t
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # [b,q,q,h]
+        tri = jnp.tril(jnp.ones((q, q), jnp.bool_))
+        m = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("btn,bun->btu", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))          # [b,q,q]
+        w = cb[:, :, :, None] * m * dtq[:, None, :, :]   # [b,t,u,h]
+        y_intra = jnp.einsum("btuh,buhp->bthp", w,
+                             xq.astype(jnp.float32))
+        # inter-chunk: contribution of incoming state
+        decay_t = jnp.exp(cum)                           # [b,q,h]
+        y_state = jnp.einsum("bhpn,btn->bthp", state,
+                             Cq.astype(jnp.float32)) * decay_t[..., None]
+        # state update: h_out = exp(cum_last) * h_in + sum_u exp(cum_last -
+        # cum_u) dt_u x_u outer B_u
+        last = cum[:, -1:, :]                            # [b,1,h]
+        wu = jnp.exp(last - cum) * dtq                   # [b,q,h]
+        dstate = jnp.einsum("bqh,bqhp,bqn->bhpn",
+                            wu, xq.astype(jnp.float32),
+                            Bq.astype(jnp.float32))
+        new_state = jnp.exp(last[:, 0, :])[:, :, None, None] * state + dstate
+        return new_state, (y_intra + y_state)
+
+    # scan over chunks (moveaxis chunk dim to front)
+    inp = (jnp.moveaxis(xh_c, 1, 0), jnp.moveaxis(B_c, 1, 0),
+           jnp.moveaxis(C_c, 1, 0), jnp.moveaxis(dt_c, 1, 0),
+           jnp.moveaxis(la_c, 1, 0))
+    final_state, ys = jax.lax.scan(chunk_step, init, inp)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p_)      # [b,s,h,p]
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, h * p_).astype(x.dtype)
+    # gated RMSNorm then out-projection
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)
+                                       ).astype(y.dtype),
+                       p["norm_g"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(conv=new_conv, state=final_state)
+    return out, new_cache
+
+
+def _conv_with_history(p: Params, xfull: jax.Array, s: int, sp: SSMSpec
+                       ) -> jax.Array:
+    """Conv over the last s positions given (conv-1) history prepended."""
+    w = _conv_w(p)
+    out = sum(xfull[:, i: i + s, :] * w[i][None, None, :]
+              for i in range(sp.conv))
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)
+                       ).astype(xfull.dtype)
+
+
+def mamba2_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                  cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    """Single-token decode: x [B, 1, d]."""
+    sp = spec(cfg)
+    b = x.shape[0]
+    z, xBC, dt_raw = _split_proj(p, cfg, x)
+    window = jnp.concatenate([cache.conv, xBC], axis=1)   # [B, conv, C]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          _conv_w(p).astype(jnp.float32))
+    xBC_conv = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)
+                           ).astype(x.dtype)[:, None, :]
+    new_conv = window[:, 1:]
+    xs = xBC_conv[..., : sp.d_inner]
+    B = xBC_conv[..., sp.d_inner: sp.d_inner + sp.state]
+    C = xBC_conv[..., sp.d_inner + sp.state:]
+    dt, log_a = _gates(p, dt_raw)                         # [b,1,h]
+    h, p_, n = sp.n_heads, sp.head_dim, sp.state
+    xh = xs.reshape(b, h, p_).astype(jnp.float32)
+    a = jnp.exp(log_a[:, 0, :])                           # [b,h]
+    dstate = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh,
+                        B[:, 0].astype(jnp.float32))
+    state = a[:, :, None, None] * cache.state + dstate
+    y = jnp.einsum("bhpn,bn->bhp", state, C[:, 0].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, h * p_).astype(x.dtype)
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)
+                                       ).astype(y.dtype),
+                       p["norm_g"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, SSMCache(conv=new_conv, state=state)

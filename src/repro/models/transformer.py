@@ -1,0 +1,150 @@
+"""Block definitions and scanned layer stacks for every family.
+
+All stacks run under ``lax.scan`` over stacked per-layer parameters (init
+via ``jax.vmap`` over split keys) so HLO size stays O(1) in depth; blocks
+are wrapped in ``jax.checkpoint`` according to ``cfg.remat_policy``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import layers, moe as moe_mod, rwkv as rwkv_mod, ssm as ssm_mod
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _remat(fn: Callable, policy: str) -> Callable:
+    if policy == "nothing":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)            # "full": save nothing extra
+
+
+def stack_init(key: jax.Array, n: int, init_fn: Callable[[jax.Array], Params]
+               ) -> Params:
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------
+# dense / moe / audio blocks
+# --------------------------------------------------------------------------
+
+def dense_block_init(key: jax.Array, cfg: ModelConfig, d_ff: int = 0) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dt),
+        "attn": attn_mod.attn_init(k1, cfg, pad_q_heads=cfg.pad_q_heads),
+        "ln2": layers.rmsnorm_init(cfg.d_model, dt),
+        "mlp": layers.mlp_init(k2, cfg.d_model, d_ff or cfg.d_ff, dt),
+    }
+
+
+def dense_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array,
+                cache: Optional[attn_mod.KVCache] = None,
+                cache_pos: Optional[jax.Array] = None,
+                return_cache: bool = False
+                ) -> Tuple[jax.Array, Optional[attn_mod.KVCache]]:
+    h, new_cache = attn_mod.attention(
+        p["attn"], cfg, layers.rmsnorm(x, p["ln1"], cfg.norm_eps),
+        positions, kv_repeat=cfg.kv_repeat, cache=cache,
+        cache_pos=cache_pos, return_cache=return_cache)
+    x = x + h
+    x = x + layers.mlp_apply(p["mlp"],
+                             layers.rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x, new_cache
+
+
+def moe_block_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dt),
+        "attn": attn_mod.attn_init(k1, cfg, pad_q_heads=cfg.pad_q_heads),
+        "ln2": layers.rmsnorm_init(cfg.d_model, dt),
+        "moe": moe_mod.moe_init(k2, cfg,
+                                shared_expert=cfg.moe_shared_expert),
+    }
+
+
+def moe_block(p: Params, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array,
+              cache: Optional[attn_mod.KVCache] = None,
+              cache_pos: Optional[jax.Array] = None,
+              return_cache: bool = False
+              ) -> Tuple[jax.Array, Optional[attn_mod.KVCache], jax.Array]:
+    h, new_cache = attn_mod.attention(
+        p["attn"], cfg, layers.rmsnorm(x, p["ln1"], cfg.norm_eps),
+        positions, kv_repeat=cfg.kv_repeat, cache=cache,
+        cache_pos=cache_pos, return_cache=return_cache)
+    x = x + h
+    y, aux = moe_mod.moe_apply(p["moe"], cfg,
+                               layers.rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x + y, new_cache, aux
+
+
+def cross_block_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dt),
+        "xattn": attn_mod.attn_init(k1, cfg, pad_q_heads=cfg.pad_q_heads,
+                                    cross=True),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "ln2": layers.rmsnorm_init(cfg.d_model, dt),
+        "mlp": layers.mlp_init(k2, cfg.d_model, cfg.d_ff, dt),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def cross_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                img: jax.Array, positions: jax.Array) -> jax.Array:
+    """Gated cross-attention block (llama3.2-vision style)."""
+    h, _ = attn_mod.attention(
+        p["xattn"], cfg, layers.rmsnorm(x, p["ln1"], cfg.norm_eps),
+        positions, kv_repeat=cfg.kv_repeat, xs=img)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * h
+    m = layers.mlp_apply(p["mlp"], layers.rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * m
+
+
+# --------------------------------------------------------------------------
+# rwkv block
+# --------------------------------------------------------------------------
+
+def rwkv_block_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dt),
+        "time": rwkv_mod.time_mix_init(k1, cfg),
+        "ln2": layers.rmsnorm_init(cfg.d_model, dt),
+        "chan": rwkv_mod.channel_mix_init(k2, cfg),
+    }
+
+
+# --------------------------------------------------------------------------
+# mamba (hybrid) block
+# --------------------------------------------------------------------------
+
+def mamba_block_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln": layers.rmsnorm_init(cfg.d_model, dt),
+        "ssm": ssm_mod.mamba2_init(key, cfg),
+    }
+
+
+def shared_attn_block_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    """zamba2: one attention+MLP block whose weights are shared across all
+    its applications along the depth."""
+    return dense_block_init(key, cfg)

@@ -1,0 +1,483 @@
+"""Structural HLO-text analyzer with loop-trip-count accounting.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts any scanned layer stack by ~L x.  This module walks the
+partitioned HLO text structurally instead:
+
+* builds the computation call graph (while bodies, fusion calls,
+  to_apply calls, conditional branches),
+* extracts while trip counts from the loop-condition computation
+  (max integer constant compared against the induction variable),
+* multiplies nested costs by trip counts,
+* counts dot/convolution FLOPs exactly from shapes + contracting dims,
+* models HBM traffic as (operands + result) bytes of every top-level
+  op / fusion (fusion internals are on-chip),
+* accounts collective traffic per-chip with ring factors
+  (all-reduce ~ 2x buffer, others ~ 1x buffer).
+
+Shapes in post-SPMD-partitioning HLO are per-device, so every number is
+per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s*"
+                  r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred|"
+                    r"c64|c128)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+               "f32": 4, "s32": 4, "u32": 4,
+               "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1}
+
+# ops whose line we do not charge for HBM traffic
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "iota",
+               "after-all", "add-dependency", "partition-id", "replica-id"}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    result_types: str        # text before the op name (shapes of result)
+    op: str                  # op kind, e.g. "dot", "fusion", "while"
+    rest: str                # remainder of line after '('
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpLine]
+    defs: Dict[str, str]     # %name -> result type text
+    params: List[str] = dataclasses.field(default_factory=list)
+    # header parameter names, in positional order
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += mult * other.coll_bytes[k]
+            self.coll_counts[k] += mult * other.coll_counts[k]
+        self.notes.extend(other.notes)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    param_re = re.compile(r"([\w.\-]+):\s*(\([^)]*\)|[^,()]+)")
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.strip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+                # header params carry shapes: "%f (p0: f32[8,4], ...) -> .."
+                hdr = line.strip()
+                inner = hdr[hdr.find("(") + 1: hdr.rfind("->")]
+                for pname, ptype in param_re.findall(inner):
+                    cur.defs.setdefault(pname, ptype)
+                    cur.params.append(pname)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF.match(line)
+        if m:
+            name, rtype, op, rest = m.groups()
+            cur.defs[name] = rtype
+            cur.ops.append(OpLine(name, rtype, op, rest))
+    return comps, entry
+
+
+def _dot_flops(op: OpLine, defs: Dict[str, str]) -> float:
+    res_dims = _shape_dims(op.result_types)
+    if res_dims is None:
+        return 0.0
+    out = 1
+    for d in res_dims:
+        out *= d
+    # contracting size from lhs operand shape
+    operands = _OPERAND.findall(op.rest)
+    contract = 1
+    m = _CONTRACT.search(op.rest)
+    if m and operands:
+        lhs_type = defs.get(operands[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        if lhs_dims:
+            for idx in m.group(1).split(","):
+                if idx:
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+    return 2.0 * out * contract
+
+
+def _conv_flops(op: OpLine, defs: Dict[str, str]) -> float:
+    # rough: 2 * output elems * (kernel elems / output-feature dim)
+    res_dims = _shape_dims(op.result_types)
+    operands = _OPERAND.findall(op.rest)
+    if not res_dims or len(operands) < 2:
+        return 0.0
+    out = 1
+    for d in res_dims:
+        out *= d
+    k_dims = _shape_dims(defs.get(operands[1], ""))
+    if not k_dims:
+        return 0.0
+    k = 1
+    for d in k_dims:
+        k *= d
+    # kernel already includes in/out channels; divide by output channels
+    # (last dim of result by convention would be wrong in general; accept
+    # the approximation and note it)
+    return 2.0 * out * k / max(res_dims[-1], 1)
+
+
+def _operands(op: OpLine) -> List[str]:
+    # operands appear before the first ")," metadata section
+    head = op.rest.split("),", 1)[0]
+    return _OPERAND.findall(head)
+
+
+def _line_traffic(op: OpLine, defs: Dict[str, str]) -> float:
+    """HBM traffic model for one top-level op.
+
+    Slicing ops read only what they produce; in-place updates write only
+    the update region; everything else reads its operands and writes its
+    result.
+    """
+    res = _shape_bytes(op.result_types)
+    kind = op.op
+    ops_ = _operands(op)
+    if kind in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * res                      # read slice + write slice
+    if kind == "dynamic-update-slice":
+        upd = _shape_bytes(defs.get(ops_[1], "")) if len(ops_) > 1 else 0
+        return 2.0 * upd                      # read update + write region
+    if kind == "scatter":
+        upd = _shape_bytes(defs.get(ops_[2], "")) if len(ops_) > 2 else res
+        return 2.0 * upd
+    if kind in ("broadcast", "iota", "reshape"):
+        return float(res)
+    if kind in ("transpose", "copy", "convert", "reverse", "bitcast-convert"):
+        return 2.0 * res
+    total = float(res)
+    for o in ops_:
+        t = defs.get(o)
+        if t:
+            total += _shape_bytes(t)
+    return total
+
+
+_DS_LIKE = ("dynamic-slice", "gather", "slice")
+
+
+def _fusion_traffic(op: OpLine, defs: Dict[str, str],
+                    comps: Dict[str, Computation]) -> float:
+    """Fusion = one HBM pass over real inputs + output, EXCEPT operands
+    that are only sliced inside the fused computation (scan xs buffers):
+    those contribute only the sliced bytes."""
+    res = _shape_bytes(op.result_types)
+    m = _CALLS.search(op.rest)
+    sub = comps.get(m.group(1)) if m else None
+    ops_ = _operands(op)
+    param_uses: Dict[int, List[OpLine]] = {}
+    root_op: Optional[OpLine] = None
+    if sub is not None:
+        param_names = {p: i for i, p in enumerate(sub.params)}
+        for o in sub.ops:
+            for ref in _OPERAND.findall(o.rest):
+                if ref in param_names:
+                    param_uses.setdefault(param_names[ref], []).append(o)
+        root_op = sub.ops[-1] if sub.ops else None
+    # in-place cache update: fusion rooted in dynamic-update-slice writes
+    # only the update region (the big buffer is aliased, not copied)
+    dus_alias_param: Optional[int] = None
+    if root_op is not None and root_op.op == "dynamic-update-slice":
+        upd_ops = _OPERAND.findall(root_op.rest)
+        upd_bytes = (_shape_bytes(sub.defs.get(upd_ops[1], ""))
+                     if len(upd_ops) > 1 else 0)
+        total = 2.0 * upd_bytes
+        if upd_ops and sub is not None:
+            tgt = upd_ops[0]
+            if tgt in sub.params:
+                dus_alias_param = sub.params.index(tgt)
+    else:
+        total = float(res)
+    for i, o in enumerate(ops_):
+        t = defs.get(o)
+        if not t:
+            continue
+        if i == dus_alias_param:
+            continue                  # aliased in-place buffer
+        uses = param_uses.get(i)
+        if uses and all(u.op in _DS_LIKE for u in uses):
+            total += sum(_shape_bytes(u.result_types) for u in uses)
+        else:
+            total += _shape_bytes(t)
+    return total
+
+
+_KNOWN_TRIPS = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(cond: Computation, while_line: str = "") -> Tuple[float, bool]:
+    # Preferred: XLA records the trip count on the while op itself.
+    m = _KNOWN_TRIPS.search(while_line)
+    if m:
+        return float(m.group(1)), True
+    # Fallback: max integer constant in the loop condition computation.
+    consts = []
+    for op in cond.ops:
+        line = f"%{op.name} = {op.result_types} {op.op}({op.rest}"
+        consts += [int(c) for c in _CONST_INT.findall(line)]
+    if consts:
+        return float(max(consts)), True
+    return 1.0, False
+
+
+def analyze(hlo: str) -> Cost:
+    comps, entry = parse_computations(hlo)
+    memo: Dict[str, Cost] = {}
+
+    def cost_of(name: str, depth: int = 0) -> Cost:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in comps:
+            return Cost()
+        comp = comps[name]
+        c = Cost()
+        # make all defs of the module visible for operand shape lookups
+        defs = comp.defs
+        for op in comp.ops:
+            if op.op == "dot":
+                c.flops += _dot_flops(op, defs)
+                c.bytes += _line_traffic(op, defs)
+            elif op.op == "convolution":
+                c.flops += _conv_flops(op, defs)
+                c.bytes += _line_traffic(op, defs)
+            elif op.op == "while":
+                m = _WHILE.search(op.rest)
+                if m:
+                    cond_name, body_name = m.group(1), m.group(2)
+                    trips, found = _trip_count(
+                        comps.get(cond_name,
+                                  Computation(cond_name, [], {})),
+                        op.rest)
+                    if not found:
+                        c.notes.append(f"no trip count for {name}->"
+                                       f"{body_name}; assuming 1")
+                    c.add(cost_of(body_name, depth + 1), trips)
+                    c.add(cost_of(cond_name, depth + 1), trips)
+            elif op.op == "conditional":
+                m = _BRANCHES.search(op.rest)
+                if m:
+                    for b in _OPERAND.findall(m.group(1)):
+                        c.add(cost_of(b, depth + 1), 1.0)
+            elif op.op == "fusion":
+                m = _CALLS.search(op.rest)
+                if m:
+                    sub = cost_of(m.group(1), depth + 1)
+                    c.flops += sub.flops          # dots inside fusions
+                    for k in COLLECTIVES:
+                        c.coll_bytes[k] += sub.coll_bytes[k]
+                        c.coll_counts[k] += sub.coll_counts[k]
+                c.bytes += _fusion_traffic(op, defs, comps)
+            elif op.op == "call":
+                m = _TO_APPLY.search(op.rest)
+                if m:
+                    c.add(cost_of(m.group(1), depth + 1), 1.0)
+            elif any(op.op.startswith(k) for k in COLLECTIVES):
+                kind = next(k for k in COLLECTIVES if op.op.startswith(k))
+                if op.op.endswith("-done"):
+                    continue
+                nbytes = _shape_bytes(op.result_types)
+                factor = 2.0 if kind == "all-reduce" else 1.0
+                c.coll_bytes[kind] += factor * nbytes
+                c.coll_counts[kind] += 1
+                c.bytes += _line_traffic(op, defs)
+            elif op.op in _NO_TRAFFIC:
+                continue
+            else:
+                # reduce, sort, custom-call, copy, dynamic-update-slice, ...
+                c.bytes += _line_traffic(op, defs)
+                sub = _TO_APPLY.search(op.rest)
+                if sub and op.op in ("reduce", "sort", "scatter",
+                                     "select-and-scatter", "reduce-window",
+                                     "map"):
+                    pass  # applied computation is per-element: negligible
+        memo[name] = c
+        return c
+
+    # fusions referenced from the entry are walked through cost_of; nested
+    # computations are only counted when referenced.
+    return cost_of(entry)
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str
+                 ) -> Dict[str, float]:
+    mults: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mults[name]
+        for op in comp.ops:
+            subs = []
+            if op.op == "while":
+                w = _WHILE.search(op.rest)
+                if w:
+                    trips, _ = _trip_count(comps.get(
+                        w.group(1), Computation(w.group(1), [], {})),
+                        op.rest)
+                    subs = [(w.group(1), m * trips), (w.group(2), m * trips)]
+            elif op.op == "fusion":
+                f = _CALLS.search(op.rest)
+                if f:
+                    subs = [(f.group(1), m)]
+            elif op.op == "call":
+                f = _TO_APPLY.search(op.rest)
+                if f:
+                    subs = [(f.group(1), m)]
+            for sub, mm in subs:
+                mults[sub] = mults.get(sub, 0.0) + mm
+                if sub not in seen:
+                    seen.add(sub)
+                    order.append(sub)
+    return mults
+
+
+def top_bytes(hlo: str, n: int = 15):
+    """Debug helper: largest HBM-traffic contributors (bytes x trips)."""
+    comps, entry = parse_computations(hlo)
+    mults = _multipliers(comps, entry)
+    rows = []
+    for name, comp in comps.items():
+        m = mults.get(name, 0.0)
+        if m == 0:
+            continue
+        for op in comp.ops:
+            if op.op in _NO_TRAFFIC:
+                continue
+            if op.op == "fusion":
+                b = _fusion_traffic(op, comp.defs, comps)
+            else:
+                b = _line_traffic(op, comp.defs)
+            if b > 0:
+                rows.append((b * m, m, name[:36], op.op, op.name[:28],
+                             op.result_types[:48]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def top_dots(hlo: str, n: int = 15):
+    """Debug helper: the n largest dot contributions (flops x trips)."""
+    comps, entry = parse_computations(hlo)
+    mults: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mults[name]
+        for op in comp.ops:
+            if op.op == "while":
+                w = _WHILE.search(op.rest)
+                if w:
+                    trips, _ = _trip_count(comps.get(
+                        w.group(1), Computation(w.group(1), [], {})),
+                        op.rest)
+                    for sub in (w.group(1), w.group(2)):
+                        mults[sub] = mults.get(sub, 0.0) + m * trips
+                        if sub not in seen:
+                            seen.add(sub)
+                            order.append(sub)
+            elif op.op == "fusion":
+                f = _CALLS.search(op.rest)
+                if f:
+                    sub = f.group(1)
+                    mults[sub] = mults.get(sub, 0.0) + m
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+            elif op.op == "call":
+                f = _TO_APPLY.search(op.rest)
+                if f:
+                    sub = f.group(1)
+                    mults[sub] = mults.get(sub, 0.0) + m
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+    rows = []
+    for name, comp in comps.items():
+        m = mults.get(name, 0.0)
+        if m == 0:
+            continue
+        for op in comp.ops:
+            if op.op == "dot":
+                fl = _dot_flops(op, comp.defs)
+                rows.append((fl * m, m, name, op.name,
+                             op.result_types[:60]))
+    rows.sort(reverse=True)
+    return rows[:n]

@@ -1,0 +1,37 @@
+"""Elastic scaling: re-mesh + reshard live state when the device pool
+changes (node loss / capacity add).
+
+The mechanism is sharding-agnostic because checkpoints store global
+arrays with shard indices (checkpoint/ckpt.py): ``reshard_tree`` moves a
+live pytree onto a NEW mesh by re-deriving the sharding rules for the
+new mesh and ``jax.device_put``-ing with the new shardings; data
+pipelines re-partition automatically (deterministic stream keyed by
+step).  On a real fleet the surviving hosts restore from the latest
+checkpoint with the new mesh's shardings — covered by
+``tests/test_fault.py::test_elastic_restore_smaller_mesh``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from ..models.config import ModelConfig
+from ..parallel import sharding as shd
+
+
+def remesh(devices_shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(devices_shape, axes)
+
+
+def reshard_params(cfg: ModelConfig, params: Any, new_mesh: Mesh) -> Any:
+    """Move a live param tree onto a new mesh (shrink or grow)."""
+    shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    shards = shd.param_shardings(cfg, shapes, new_mesh)
+    return jax.tree.map(jax.device_put, params, shards)
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    return jax.tree.map(jax.device_put, tree, shardings)

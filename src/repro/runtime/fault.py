@@ -1,0 +1,118 @@
+"""Fault tolerance: checkpoint/restart driver with failure injection.
+
+``ResilientLoop`` wraps a train step with:
+
+* periodic async checkpointing (``ckpt.AsyncSaver``),
+* automatic restart-from-latest on failure (any exception from the
+  step — on real fleets this is a NaN guard, a device error, or a
+  preemption signal),
+* a failure injector for tests (``inject_failure_at``),
+* a bad-step guard: non-finite loss skips the update (the params/opt
+  returned by the step are discarded) and counts toward a restart
+  threshold — the standard large-run anti-NaN policy.
+
+One JAX process == one model of the whole fleet here (CPU container);
+on a real multi-host fleet the same loop runs per host and the restore
+path re-materialises each host's addressable shards (ckpt.restore with
+target shardings covers both).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import ckpt
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 10
+    max_restarts: int = 3
+    bad_step_limit: int = 5
+
+
+class FailureInjector:
+    """Deterministic fault injection for tests."""
+
+    def __init__(self, fail_at=()):
+        self.fail_at = set(fail_at)
+        self.fired = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+class ResilientLoop:
+    def __init__(self, cfg: LoopConfig, train_step: Callable,
+                 init_state: Callable[[], Any],
+                 injector: Optional[FailureInjector] = None):
+        """``init_state() -> (params, opt_state, data_state)``;
+        ``train_step(params, opt_state, batch) -> (params, opt_state,
+        metrics)``."""
+        self.cfg = cfg
+        self.train_step = train_step
+        self.init_state = init_state
+        self.injector = injector or FailureInjector()
+        self.saver = ckpt.AsyncSaver()
+        self.restarts = 0
+        self.history: list = []
+
+    def _restore_or_init(self):
+        last = ckpt.latest_step(self.cfg.ckpt_dir)
+        params, opt_state, data_state = self.init_state()
+        if last is not None:
+            tree = {"params": params, "opt": opt_state,
+                    "data_step": np.zeros((), np.int64)}
+            restored = ckpt.restore(self.cfg.ckpt_dir, last, tree)
+            params, opt_state = restored["params"], restored["opt"]
+            data_state.state.step = int(restored["data_step"])
+            start = last
+        else:
+            start = 0
+        return params, opt_state, data_state, start
+
+    def run(self, make_batch: Callable[[Any], Dict], n_steps: int) -> Dict:
+        """Runs to n_steps with restart-on-failure.  Returns summary."""
+        bad_steps = 0
+        while True:
+            try:
+                params, opt_state, data_state, step = \
+                    self._restore_or_init()
+                while step < n_steps:
+                    self.injector.maybe_fail(step)
+                    batch = make_batch(data_state)
+                    new_p, new_o, metrics = self.train_step(
+                        params, opt_state, batch)
+                    loss = float(metrics["loss"])
+                    if not np.isfinite(loss):
+                        bad_steps += 1          # skip the poisoned update
+                        if bad_steps > self.cfg.bad_step_limit:
+                            raise RuntimeError("too many non-finite steps")
+                    else:
+                        params, opt_state = new_p, new_o
+                        self.history.append((step, loss))
+                    data_state.advance()
+                    step += 1
+                    if step % self.cfg.ckpt_every == 0:
+                        self.saver.save_async(
+                            self.cfg.ckpt_dir, step,
+                            {"params": params, "opt": opt_state,
+                             "data_step": np.asarray(
+                                 data_state.state.step, np.int64)})
+                self.saver.wait()
+                return {"steps": step, "restarts": self.restarts,
+                        "bad_steps": bad_steps,
+                        "final_loss": self.history[-1][1]
+                        if self.history else None}
+            except Exception:                    # noqa: BLE001
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                self.saver.wait()                # flush pending save

@@ -1,0 +1,49 @@
+"""Straggler mitigation policies.
+
+Two mechanisms, both exercised by tests/examples:
+
+* ``DeadlineSkip``: a per-step deadline on any host-side dependency
+  (data fetch, checkpoint barrier).  Misses are skipped and counted;
+  a consecutive-miss threshold escalates to the fault layer (the
+  node is probably sick, not slow).
+* At the scheduling layer, PPCC admission itself is the mitigation:
+  conflicting updates from slow replicas don't barrier fast ones
+  (examples/async_training.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass
+class StragglerStats:
+    served: int = 0
+    skipped: int = 0
+    consecutive_misses: int = 0
+
+
+class DeadlineSkip:
+    def __init__(self, deadline_s: float, escalate_after: int = 5):
+        self.deadline_s = deadline_s
+        self.escalate_after = escalate_after
+        self.stats = StragglerStats()
+
+    def fetch(self, get: Callable[[float], Any],
+              fallback: Optional[Any] = None) -> Any:
+        """``get(timeout)`` should raise queue.Empty on deadline."""
+        try:
+            item = get(self.deadline_s)
+            self.stats.served += 1
+            self.stats.consecutive_misses = 0
+            return item
+        except queue.Empty:
+            self.stats.skipped += 1
+            self.stats.consecutive_misses += 1
+            if self.stats.consecutive_misses >= self.escalate_after:
+                raise TimeoutError(
+                    f"{self.stats.consecutive_misses} consecutive "
+                    f"deadline misses — escalating to fault handling")
+            return fallback

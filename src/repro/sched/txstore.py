@@ -1,0 +1,74 @@
+"""Transactional page store: PPCC-scheduled concurrent updates to shared
+sharded state (parameter shards, KV pages, adapter banks).
+
+The store holds ``pages`` as one [n_pages, page_size] array (shardable
+over the mesh).  Actors submit transactions = (read set, write set,
+update payload); per tick the scheduler (``repro.sched.scheduler``)
+admits a serializable subset and the store applies the admitted writes
+in the precedence-consistent commit order.
+
+Semantics of an admitted transaction's write: ``pages[w] +=
+payload[w]`` (delta updates — the async-DP gradient-push model) or
+``pages[w] = payload[w]`` (overwrite) per transaction flag.  Because the
+commit order respects the precedence graph, a reader that was admitted
+*before* a conflicting writer observes the pre-write page (the paper's
+strict-protocol read semantics), which the engine realises by snapshot-
+reading before any write applies.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import scheduler
+
+
+class TxBatch(NamedTuple):
+    read_sets: jax.Array     # bool[n, n_pages]
+    write_sets: jax.Array    # bool[n, n_pages]
+    payload: jax.Array       # f32[n, n_pages, page] (sparse-by-mask)
+    additive: jax.Array      # bool[n]  (+= vs =)
+    valid: jax.Array         # bool[n]
+
+
+class TickStats(NamedTuple):
+    admitted: jax.Array
+    aborted: jax.Array
+    n_admitted: jax.Array
+
+
+def apply_tick(pages: jax.Array, batch: TxBatch, policy: str = "ppcc"
+               ) -> Tuple[jax.Array, jax.Array, TickStats]:
+    """One scheduling tick.
+
+    Returns (new_pages, reads [n, n_pages, page] snapshot for admitted
+    readers, stats).
+    """
+    res = scheduler.tick(batch.read_sets, batch.write_sets, batch.valid,
+                         policy=policy)
+    admitted = res.admitted
+    # snapshot reads: all admitted transactions read the pre-tick state
+    # (strict protocol: writes land at commit, after every read)
+    read_mask = batch.read_sets & admitted[:, None]
+    reads = jnp.where(read_mask[:, :, None], pages[None], 0.0)
+
+    # apply writes in commit order: sort transactions by commit rank and
+    # fold payloads (later rank overwrites / accumulates)
+    n = batch.read_sets.shape[0]
+    order = jnp.argsort(jnp.where(res.commit_rank < 0, 2 ** 30,
+                                  res.commit_rank))
+
+    def fold(pages, idx):
+        w = batch.write_sets[idx] & admitted[idx]
+        pay = batch.payload[idx]
+        add = batch.additive[idx]
+        updated = jnp.where(
+            w[:, None], jnp.where(add, pages + pay, pay), pages)
+        return updated, None
+
+    pages, _ = jax.lax.scan(fold, pages, order)
+    stats = TickStats(admitted=admitted, aborted=res.aborted,
+                      n_admitted=admitted.sum())
+    return pages, reads, stats

@@ -1,0 +1,6 @@
+import os
+import sys
+from pathlib import Path
+
+# tests run on the single real CPU device; only dryrun.py forces 512.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))

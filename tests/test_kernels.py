@@ -1,0 +1,105 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.conflict import pack_bitsets
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,t,d", [
+    (1, 2, 2, 128, 128, 64),
+    (2, 4, 2, 256, 256, 64),
+    (1, 8, 1, 128, 256, 128),   # GQA group 8, cross seq lens
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, hq, hkv, s, t, d, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, t, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, t, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal,
+                              block_q=128, block_k=128)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("n,w,block", [(128, 4, 64), (256, 32, 128),
+                                       (512, 7, 256)])
+def test_conflict_matrix(n, w, block):
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    rb = jax.random.bits(ks[0], (n, w), jnp.uint32)
+    wb = jax.random.bits(ks[1], (n, w), jnp.uint32)
+    out = ops.conflict_matrix(rb, wb, block=block)
+    exp = ref.conflict_matrix_ref(rb, wb)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_pack_bitsets_roundtrip():
+    rng = np.random.default_rng(0)
+    sets = rng.random((64, 100)) < 0.3
+    packed = np.asarray(pack_bitsets(jnp.array(sets)))
+    # unpack manually
+    bits = ((packed[:, :, None] >> np.arange(32)[None, None, :]) & 1
+            ).astype(bool).reshape(64, -1)[:, :100]
+    np.testing.assert_array_equal(bits, sets)
+
+
+@pytest.mark.parametrize("b,h,s,dk,chunk", [
+    (1, 2, 64, 16, 16), (2, 3, 128, 32, 64), (1, 1, 256, 64, 64),
+])
+def test_wkv_kernel(b, h, s, dk, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (b, h, s, dk)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, s, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, s, dk)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, h, s, dk)) * 0.5 - 2)
+    u = jax.random.normal(ks[4], (h, dk)) * 0.1
+    out = ops.wkv_chunked(r, k, v, lw, u, chunk=chunk)
+
+    def resh(x):
+        return jnp.moveaxis(x, 1, 2).reshape(b, s, h * dk)
+    exp, _ = ref.wkv_ref(resh(r), resh(k), resh(v), resh(lw),
+                         u.reshape(-1), dk)
+    exp = jnp.moveaxis(exp.reshape(b, s, h, dk), 2, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_wkv_kernel_matches_model_path():
+    """The Pallas kernel and the model's jnp chunked WKV agree."""
+    from repro.models.rwkv import wkv_chunked as model_wkv
+    b, h, s, dk = 2, 2, 128, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r = jax.random.normal(ks[0], (b, s, h * dk)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h * dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h * dk)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h * dk)) * 0.5 - 2)
+    u = jax.random.normal(ks[4], (h * dk,)) * 0.1
+    out_model, _ = model_wkv(r, k, v, lw, u, dk, chunk=32)
+
+    def toh(x):
+        return jnp.moveaxis(x.reshape(b, s, h, dk), 2, 1)
+    out_kern = ops.wkv_chunked(toh(r), toh(k), toh(v), toh(lw),
+                               u.reshape(h, dk), chunk=32)
+    out_kern = jnp.moveaxis(out_kern, 1, 2).reshape(b, s, h * dk)
+    np.testing.assert_allclose(np.asarray(out_model), np.asarray(out_kern),
+                               atol=1e-4, rtol=1e-3)

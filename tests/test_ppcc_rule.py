@@ -1,0 +1,130 @@
+"""Unit semantics of the Prudent Precedence Rule (paper Section 2) against
+the tensorised protocol module, including the paper's worked examples."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ppcc
+
+I = jnp.int32
+
+
+def fresh(n=6, d=12, active=4):
+    s = ppcc.init_state(n, d)
+    for i in range(active):
+        s = ppcc.begin(s, I(i))
+    return s
+
+
+def test_example1_raw_precedence():
+    # T1: R1(b) W1(a); T2: R2(a) -> T2 precedes T1
+    s = fresh()
+    s, v = ppcc.try_read(s, I(0), I(1)); assert v == ppcc.PROCEED
+    s, v = ppcc.try_write(s, I(0), I(0)); assert v == ppcc.PROCEED
+    s, v = ppcc.try_read(s, I(1), I(0)); assert v == ppcc.PROCEED
+    assert bool(s.prec[1, 0])          # T2 -> T1
+    assert bool(s.preceding[1]) and bool(s.preceded[0])
+
+
+def test_example2_war_precedence():
+    # R1(b) R2(a) W1(a): T2 -> T1 via write-after-read
+    s = fresh()
+    s, _ = ppcc.try_read(s, I(0), I(1))
+    s, _ = ppcc.try_read(s, I(1), I(0))
+    s, v = ppcc.try_write(s, I(0), I(0))
+    assert v == ppcc.PROCEED
+    assert bool(s.prec[1, 0])
+
+
+def test_example3_violation_blocks():
+    # T2 (preceding) cannot be preceded: R3(e) blocks
+    s = fresh()
+    s, _ = ppcc.try_read(s, I(0), I(1))        # R1(b)
+    s, _ = ppcc.try_write(s, I(0), I(0))       # W1(a)
+    s, _ = ppcc.try_read(s, I(1), I(0))        # R2(a): T2 -> T1
+    s, _ = ppcc.try_write(s, I(1), I(2))       # W2(e)
+    s, v = ppcc.try_read(s, I(2), I(2))        # R3(e): violates rule (ii)
+    assert v == ppcc.BLOCK
+    # after T2 commits the read proceeds
+    s2, ok = ppcc.wc_acquire_locks(s, I(1))
+    assert bool(ok)
+    assert bool(ppcc.can_commit(s2, I(1)))
+    s3 = ppcc.commit(s2, I(1))
+    s3, v = ppcc.try_read(s3, I(2), I(2))
+    assert v == ppcc.PROCEED
+
+
+def test_example4_wc_lock_abort():
+    # T1: R1(a) R1(b); T2: R2(b) W2(a) W2(b); T2 enters wait-to-commit,
+    # T1 then touches a locked item it precedes the owner of -> ABORT
+    s = fresh()
+    s, _ = ppcc.try_read(s, I(0), I(0))        # R1(a)
+    s, _ = ppcc.try_read(s, I(1), I(1))        # R2(b)
+    s, v = ppcc.try_write(s, I(1), I(0))       # W2(a): T1 -> T2
+    assert v == ppcc.PROCEED and bool(s.prec[0, 1])
+    s, v = ppcc.try_write(s, I(1), I(1))       # W2(b)
+    assert v == ppcc.PROCEED
+    s, ok = ppcc.wc_acquire_locks(s, I(1))     # locks a and b
+    assert bool(ok)
+    assert not bool(ppcc.can_commit(s, I(1)))  # T1 still precedes T2
+    s, v = ppcc.try_read(s, I(0), I(1))        # R1(b): b locked by T2,
+    assert v == ppcc.ABORT                     # and T1 precedes T2
+    s = ppcc.abort(s, I(0))
+    assert bool(ppcc.can_commit(s, I(1)))
+
+
+def test_waw_no_precedence():
+    s = fresh()
+    s, _ = ppcc.try_write(s, I(0), I(3))
+    s, v = ppcc.try_write(s, I(1), I(3))
+    assert v == ppcc.PROCEED
+    assert not bool(s.prec.any())
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 9),
+                          st.booleans()), min_size=1, max_size=60),
+       st.integers(0, 2 ** 31 - 1))
+def test_invariants_random_ops(ops_list, seed):
+    """Theorem 1 invariants hold under arbitrary admissible op streams,
+    with random commits/aborts interleaved."""
+    rng = np.random.default_rng(seed)
+    s = fresh(n=6, d=10, active=6)
+    for txn, item, is_write in ops_list:
+        s, v = ppcc.try_op(s, I(txn), I(item), jnp.bool_(is_write))
+        if rng.random() < 0.1:
+            victim = int(rng.integers(6))
+            if rng.random() < 0.5:
+                if bool(ppcc.can_commit(s, I(victim))):
+                    s = ppcc.commit(s, I(victim))
+            else:
+                s = ppcc.abort(s, I(victim))
+            s = ppcc.begin(s, I(victim))
+        assert bool(ppcc.path_length_leq_one(s))
+        assert bool(ppcc.acyclic(s))
+        assert bool(ppcc.classes_consistent(s))
+
+
+def test_admit_ops_matches_sequential():
+    """Batch admission (scan) == one-at-a-time application."""
+    rng = np.random.default_rng(0)
+    n, d, m = 8, 16, 40
+    txn = rng.integers(0, n, m)
+    item = rng.integers(0, d, m)
+    wr = rng.random(m) < 0.4
+    s0 = fresh(n=n, d=d, active=n)
+    batch = ppcc.admit_ops(
+        s0, jnp.array(txn, jnp.int32), jnp.array(item, jnp.int32),
+        jnp.array(wr), jnp.ones(m, bool))
+    s_seq = s0
+    verdicts = []
+    for t, x, w in zip(txn, item, wr):
+        s_seq, v = ppcc.try_op(s_seq, I(int(t)), I(int(x)), jnp.bool_(bool(w)))
+        verdicts.append(int(v))
+    verdicts = np.array(verdicts)
+    np.testing.assert_array_equal(
+        np.asarray(batch.admitted), verdicts == ppcc.PROCEED)
+    for a, b in zip(jax.tree.leaves(batch.state), jax.tree.leaves(s_seq)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
