@@ -84,8 +84,9 @@ def make_fig_fn(fig: int):
 FIGS = {f"fig{i}": make_fig_fn(i) for i in range(5, 17)}
 
 
-def sched_admit(args):
-    """Tensorised PPCC batch admission throughput (jit, CPU)."""
+def _sched_admit_us():
+    """Tensorised PPCC batch admission: µs/call for the sequential scan
+    and the blocked (vectorized fast-path) variant."""
     import jax
     import jax.numpy as jnp
     from repro.core import ppcc
@@ -99,18 +100,28 @@ def sched_admit(args):
     s = ppcc.init_state(n, d)
     for i in range(n):
         s = ppcc.begin(s, jnp.int32(i))
-    admit = jax.jit(ppcc.admit_ops)
-    out = admit(s, txn, item, wr, valid)          # compile
-    jax.block_until_ready(out.admitted)
-    t0 = time.time()
-    iters = 20
-    for _ in range(iters):
-        out = admit(s, txn, item, wr, valid)
-    jax.block_until_ready(out.admitted)
-    us = (time.time() - t0) / iters * 1e6
-    admitted = int(out.admitted.sum())
-    _row("sched_admit_512ops", us,
-         f"admitted={admitted}/512 ops_per_s={512 / (us / 1e6):.0f}")
+    out = {}
+    for name, fn in (("scan", jax.jit(ppcc.admit_ops)),
+                     ("blocked", jax.jit(lambda *a: ppcc.admit_ops_blocked(
+                         *a, block=32)))):
+        r = fn(s, txn, item, wr, valid)           # compile
+        jax.block_until_ready(r.admitted)
+        t0 = time.time()
+        iters = 20
+        for _ in range(iters):
+            r = fn(s, txn, item, wr, valid)
+        jax.block_until_ready(r.admitted)
+        out[name] = ((time.time() - t0) / iters * 1e6,
+                     int(r.admitted.sum()))
+    return m, out
+
+
+def sched_admit(args):
+    """Tensorised PPCC batch admission throughput (jit, CPU)."""
+    m, out = _sched_admit_us()
+    for name, (us, admitted) in out.items():
+        _row(f"sched_admit_{m}ops_{name}", us,
+             f"admitted={admitted}/{m} ops_per_s={m / (us / 1e6):.0f}")
 
 
 def kernel_flash(args):
@@ -131,21 +142,35 @@ def kernel_flash(args):
          f"flops={flops:.2e} note=interpret-mode-correctness-path")
 
 
-def kernel_conflict(args):
+def _kernel_conflict_us():
+    """µs for the two-launch path vs the fused one-pass kernel."""
     import jax
     import jax.numpy as jnp
     from repro.kernels import ops
-    key = jax.random.PRNGKey(0)
-    rb = jax.random.bits(key, (512, 128), jnp.uint32)
-    wb = jax.random.bits(key, (512, 128), jnp.uint32)
-    out = ops.conflict_matrix(rb, wb)
-    jax.block_until_ready(out)
-    t0 = time.time()
-    out = ops.conflict_matrix(rb, wb)
-    jax.block_until_ready(out)
-    us = (time.time() - t0) * 1e6
-    _row("kernel_conflict_interpret", us,
-         f"pairs={512 * 512} note=interpret-mode-correctness-path")
+    kr, kw = jax.random.split(jax.random.PRNGKey(0))
+    rb = jax.random.bits(kr, (512, 128), jnp.uint32)
+    wb = jax.random.bits(kw, (512, 128), jnp.uint32)
+
+    def two_launch():
+        return ops.conflict_matrix(rb, wb), ops.conflict_matrix(wb, wb)
+
+    def fused():
+        return ops.conflict_fused(rb, wb)
+
+    out = {}
+    for name, fn in (("two_launch", two_launch), ("fused", fused)):
+        jax.block_until_ready(fn())               # compile
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        out[name] = (time.time() - t0) * 1e6
+    return out
+
+
+def kernel_conflict(args):
+    out = _kernel_conflict_us()
+    for name, us in out.items():
+        _row(f"kernel_conflict_{name}_interpret", us,
+             f"pairs={512 * 512} note=interpret-mode-correctness-path")
 
 
 def jaxsim_parity(args):
@@ -165,12 +190,78 @@ def jaxsim_parity(args):
          f"jax_commits={jres.commits} pysim_commits={pres.commits}")
 
 
+def engine(args):
+    """Cohort-stepped vs one-event engine on the fig7 sweep (vmapped
+    over seeds — the paper-scale sweep shape), plus admission and
+    fused-kernel microbenchmarks.  Emits CSV rows AND machine-readable
+    ``BENCH_engine.json`` so future PRs can track perf regressions."""
+    import json
+    import jax
+    import jax.numpy as jnp
+    from repro.core import jaxsim
+
+    horizon = 100_000.0 if args.full else HORIZON
+    seeds = jnp.arange(3 if args.full else 2, dtype=jnp.int32)
+    base = paper_figure_params(7)
+    points = {}
+    for mpl in (50, 100, 150):
+        p = base.with_(mpl=mpl, horizon=horizon)
+        point = {}
+        for mode in ("event", "cohort"):
+            run = jax.jit(jax.vmap(jaxsim.make_engine(
+                p, "ppcc", step_mode=mode)))
+            s = run(seeds)
+            jax.block_until_ready(s.commits)      # compile + warm
+            t0 = time.time()
+            s = run(seeds)
+            jax.block_until_ready(s.commits)
+            wall = time.time() - t0
+            point[mode] = {
+                "wall_s": round(wall, 3),
+                # under vmap the loop trip count is the max over lanes
+                "iters_max": int(np.max(s.iters)),
+                "iters_mean": float(np.mean(s.iters)),
+                "commits_mean": float(np.mean(s.commits)),
+            }
+        point["iters_ratio"] = round(
+            point["event"]["iters_max"] / point["cohort"]["iters_max"], 2)
+        point["wall_ratio"] = round(
+            point["event"]["wall_s"] / point["cohort"]["wall_s"], 2)
+        points[str(mpl)] = point
+        _row(f"engine_fig7_mpl{mpl}",
+             point["cohort"]["wall_s"] * 1e6,
+             f"iters_ratio={point['iters_ratio']}x"
+             f" wall_ratio={point['wall_ratio']}x"
+             f" cohort_commits={point['cohort']['commits_mean']:.0f}"
+             f" event_commits={point['event']['commits_mean']:.0f}")
+
+    m, admit = _sched_admit_us()
+    kern = _kernel_conflict_us()
+    out = {
+        "meta": {"fig": 7, "protocol": "ppcc", "horizon": horizon,
+                 "seeds": int(seeds.shape[0]),
+                 "source": "benchmarks/run.py --only engine"},
+        "engine_fig7": points,
+        "sched_admit": {
+            name: {"us_per_call": round(us, 1), "admitted": adm,
+                   "ops_per_s": round(m / (us / 1e6))}
+            for name, (us, adm) in admit.items()},
+        "kernel_conflict_512x128": {
+            name: {"us_per_call": round(us, 1)}
+            for name, us in kern.items()},
+    }
+    path = Path(args.json_out)
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    _row("engine_json", 0.0, f"wrote={path}")
+
+
 BENCHES = dict(FIGS)
 BENCHES.update(
     sched_admit=sched_admit,
     kernel_flash=kernel_flash,
     kernel_conflict=kernel_conflict,
     jaxsim_parity=jaxsim_parity,
+    engine=engine,
 )
 
 
@@ -180,8 +271,15 @@ def main() -> None:
                     help="comma-separated bench names")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 100k-time-unit simulations")
+    ap.add_argument("--json-out",
+                    default=str(Path(__file__).resolve().parents[1]
+                                / "BENCH_engine.json"),
+                    help="where the `engine` bench writes its JSON")
     args = ap.parse_args()
-    names = (args.only.split(",") if args.only else list(BENCHES))
+    # `engine` runs 6 full sweeps and rewrites BENCH_engine.json —
+    # opt-in via --only, never part of the default figure run
+    names = (args.only.split(",") if args.only
+             else [n for n in BENCHES if n != "engine"])
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name](args)

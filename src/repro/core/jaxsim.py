@@ -2,12 +2,25 @@
 
 The event-heap oracle (``pysim``) is a pointer-chasing CPU artifact; this
 module is the TPU-native reformulation (DESIGN.md §2): the entire
-simulator state is a fixed-shape pytree and one ``lax.while_loop``
-iteration processes exactly one event — the transaction with the minimum
-next-event time — via masked tensor updates and a ``lax.switch`` over
-event kinds.  FCFS multi-server resource pools become ``free_at``
-vectors: a request reserves ``argmin(free_at)`` at request time, which
-reproduces FCFS because events are processed in time order.
+simulator state is a fixed-shape pytree and a ``lax.while_loop``
+advances it via masked tensor updates.  Two step modes share that state:
+
+* ``cohort`` (default, DESIGN.md §2.3) — each iteration processes the
+  full *cohort* of ready slots: every slot whose ``next_time`` falls
+  inside the current time quantum ``[t_min, t_min + cohort_dt]``.  The
+  cohort is split by event kind and resolved with the batched protocol
+  primitives in ``repro.core.ppcc`` (``try_ops_batched`` over a
+  ``cohort_select``-ed independent subset, ``wc_acquire_many``,
+  ``commit_many`` / ``abort_many`` / ``begin_many``); non-independent
+  ops are deferred one iteration, so progress is guaranteed.
+* ``event`` — the seed engine: one iteration processes exactly one
+  event (``argmin`` over next-event times) via a ``lax.switch``.  Kept
+  as the before/after baseline and the parity target for tests.
+
+FCFS multi-server resource pools become ``free_at`` vectors: a request
+reserves ``argmin(free_at)`` at request time, which reproduces FCFS
+because events are processed in (quantised) time order; cohort mode
+reserves for all requesters in one slot-ordered ``lax.scan``.
 
 All three protocols run on the same tensor state:
 
@@ -86,6 +99,7 @@ class EngCfg:
     restart_mean: float
     horizon: float
     max_iters: int
+    cohort_dt: float = 0.0       # time-quantum width for cohort stepping
 
 
 def _cfg(p: SimParams, max_iters: int) -> EngCfg:
@@ -139,6 +153,57 @@ def sample_txn(key: jax.Array, cfg: EngCfg) -> Tuple[jax.Array, jax.Array]:
     _, (kinds, items) = jax.lax.scan(
         slot, init, (jnp.arange(cfg.max_ops), keys, want_w))
     return kinds, items.astype(jnp.int32)
+
+
+def sample_txns(key: jax.Array, cfg: EngCfg, n: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """n transactions at once: (kinds int8[n, L], items int32[n, L]).
+
+    Same model as ``sample_txn`` — writes target a uniformly-random
+    previously-read, not-yet-written item — but all PRNG draws are
+    hoisted out of the per-op scan (threefry per scan step is the cost
+    that made per-commit resampling dominate the cohort engine).
+    """
+    L = cfg.max_ops
+    kl, kw, kp, kr = jax.random.split(key, 4)
+    length = jax.random.randint(kl, (n,), cfg.len_lo, cfg.len_hi + 1)
+    want_w = jax.random.uniform(kw, (n, L)) < cfg.write_prob
+    read_cand = jax.random.randint(kr, (n, L), 0, cfg.d)
+    pick_u = jax.random.uniform(kp, (n, L))
+
+    rows = jnp.arange(n)
+
+    def slot(carry, inp):
+        read_items, n_read, written = carry      # [n, L], int32[n], [n, L]
+        j, ww, item_r, u = inp
+        avail = (jnp.arange(L)[None, :] < n_read[:, None]) & ~written
+        n_avail = avail.sum(axis=1)
+        do_write = ww & (n_avail > 0) & (j < length)
+        # u selects uniformly among available read slots (cumsum rank)
+        target = jnp.floor(u * n_avail).astype(jnp.int32) + 1
+        wpick = jnp.argmax(jnp.cumsum(avail, axis=1) ==
+                           target[:, None], axis=1)
+        item_w = jnp.take_along_axis(read_items, wpick[:, None],
+                                     axis=1)[:, 0]
+        item = jnp.where(do_write, item_w, item_r)
+        kind = jnp.where(do_write, 1, 0).astype(jnp.int8)
+        kind = jnp.where(j < length, kind, jnp.int8(-1))
+        is_read = ~do_write & (j < length)
+        # append this read's item to the compacted read list
+        pos = jnp.minimum(n_read, L - 1)
+        cur = jnp.take_along_axis(read_items, pos[:, None], axis=1)[:, 0]
+        read_items = read_items.at[rows, pos].set(
+            jnp.where(is_read, item_r, cur))
+        n_read = n_read + is_read
+        written = written | (do_write[:, None] &
+                             (jnp.arange(L)[None, :] == wpick[:, None]))
+        return (read_items, n_read, written), (kind, item)
+
+    init = (jnp.zeros((n, L), jnp.int32), jnp.zeros(n, jnp.int32),
+            jnp.zeros((n, L), bool))
+    _, (kinds, items) = jax.lax.scan(
+        slot, init, (jnp.arange(L), want_w.T, read_cand.T, pick_u.T))
+    return jnp.moveaxis(kinds, 0, 1), jnp.moveaxis(items, 0, 1)
 
 
 def _uniform(key, mean, spread):
@@ -438,8 +503,346 @@ def _ev_restart(cfg: EngCfg, s: EngState, i) -> EngState:
     return _begin_txn(cfg, s, i, fresh=jnp.bool_(False))
 
 
-def make_engine(p: SimParams, protocol: str, max_iters: int = 400_000):
-    cfg = dataclasses.replace(_cfg(p, max_iters), protocol=protocol)
+# --------------------------------------------------------------------------
+# cohort-stepped engine (DESIGN.md §2.3)
+# --------------------------------------------------------------------------
+
+def _reserve_cohort(cpu_free: jax.Array, disk_free: jax.Array,
+                    t_req: jax.Array, cpu_dur: jax.Array,
+                    io_dur: jax.Array, cpu_m: jax.Array, disk_m: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """FCFS multi-reservation for the whole cohort in ONE scan:
+    sequential ``argmin(free_at)`` reservation per masked slot, in
+    slot-index order (the cohort's tie-break).  A slot requests at most
+    one of {cpu, disk}, so both pools ride the same scan.  Returns
+    (cpu_free', disk_free', cpu_done[n], disk_done[n])."""
+    def step(carry, inp):
+        cpu, disk, = carry
+        t, cd, dd, cm, dm = inp
+        ci = jnp.argmin(cpu)
+        cdone = jnp.maximum(t, cpu[ci]) + cd
+        cpu2 = jnp.where(cm, cpu.at[ci].set(cdone), cpu)
+        di = jnp.argmin(disk)
+        ddone = jnp.maximum(t, disk[di]) + dd
+        disk2 = jnp.where(dm, disk.at[di].set(ddone), disk)
+        return (cpu2, disk2), (jnp.where(cm, cdone, INF),
+                               jnp.where(dm, ddone, INF))
+
+    (cpu_free, disk_free), (cpu_done, disk_done) = jax.lax.scan(
+        step, (cpu_free, disk_free), (t_req, cpu_dur, io_dur, cpu_m,
+                                      disk_m))
+    return cpu_free, disk_free, cpu_done, disk_done
+
+
+def _try_ops_cohort(cfg: EngCfg, ps: P.PPCCState, item: jax.Array,
+                    is_write: jax.Array, ready: jax.Array
+                    ) -> Tuple[P.PPCCState, jax.Array, jax.Array]:
+    """Batched read-phase protocol step over a cohort of pending ops.
+
+    Selects a pairwise-independent subset of ``ready`` (protocol
+    dependent), resolves it in one vectorized step, and returns
+    (state, verdict[n], selected[n]).  Deferred (ready & ~selected)
+    slots are retried next iteration.
+    """
+    n = ps.n
+    idx = jnp.arange(n, dtype=jnp.int32)
+    eye = jnp.eye(n, dtype=bool)
+    if cfg.protocol == "ppcc":
+        return P.cohort_step(ps, item, is_write, ready)
+    if cfg.protocol == "2pl":
+        # lock-table ops only interact when they target the same item
+        # with a write involved; keep the lowest ready claimant per item.
+        same = (item[:, None] == item[None, :]) & \
+            (is_write[:, None] | is_write[None, :]) & ~eye
+        lower = idx[None, :] < idx[:, None]
+        sel = ready & ~(same & ready[None, :] & lower).any(axis=1)
+        others = ps.active[None, :] & ~eye
+        x_held = (ps.write_set[:, item].T & others).any(axis=1)
+        s_held = (ps.read_set[:, item].T & others).any(axis=1)
+        ok = jnp.where(is_write, ~x_held & ~s_held, ~x_held) & sel
+        ps2 = ps._replace(
+            read_set=ps.read_set.at[idx, item].max(ok & ~is_write),
+            write_set=ps.write_set.at[idx, item].max(ok & is_write))
+        verdict = jnp.where(ok, P.PROCEED, P.BLOCK).astype(jnp.int32)
+        return ps2, verdict, sel
+    # occ: ops never read other slots' protocol state — all independent
+    sel = ready
+    ps2 = ps._replace(
+        read_set=ps.read_set.at[idx, item].max(sel & ~is_write),
+        write_set=ps.write_set.at[idx, item].max(sel & is_write))
+    verdict = jnp.full(n, P.PROCEED, jnp.int32)
+    return ps2, verdict, sel
+
+
+def _wc_cohort(cfg: EngCfg, ps: P.PPCCState, dirty: jax.Array,
+               wc_m: jax.Array):
+    """Batched wait-to-commit step.  Returns
+    (state, flush_m, wait_lock_m, wait_prec_m, abort_m)."""
+    n = ps.n
+    zeros = jnp.zeros(n, bool)
+    if cfg.protocol == "ppcc":
+        ps2, won = P.wc_acquire_many(ps, wc_m, exact=False)
+        can = P.can_commit_many(ps2)
+        flush_m = wc_m & won & can
+        wait_prec_m = wc_m & won & ~can
+        wait_lock_m = wc_m & ~won
+        return ps2, flush_m, wait_lock_m, wait_prec_m, zeros
+    if cfg.protocol == "2pl":
+        return ps, wc_m, zeros, zeros, zeros
+    fail = (ps.read_set & dirty).any(axis=1)
+    return ps, wc_m & ~fail, zeros, zeros, wc_m & fail
+
+
+def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
+    n = cfg.n
+    idx = jnp.arange(n, dtype=jnp.int32)
+    t0 = s.next_time.min()
+    ready = (s.next_time <= t0 + cfg.cohort_dt) & (s.next_time < 0.5 * INF)
+    te = jnp.where(ready, s.next_time, t0)   # per-slot event time
+    s = s._replace(now=t0, iters=s.iters + 1)
+
+    # per-iteration randomness (vector draws; streams differ from the
+    # one-event engine — parity is statistical, as with the oracle)
+    key, kc, kd, kr, kt = jax.random.split(s.key, 5)
+    dur_cpu = jax.random.uniform(kc, (n,), minval=cfg.cpu_mean
+                                 - cfg.cpu_spread,
+                                 maxval=cfg.cpu_mean + cfg.cpu_spread)
+    dur_io = jax.random.uniform(kd, (n,), minval=cfg.io_mean
+                                - cfg.io_spread,
+                                maxval=cfg.io_mean + cfg.io_spread)
+    delay = jax.random.uniform(kr, (n,), minval=0.5 * cfg.restart_mean,
+                               maxval=1.5 * cfg.restart_mean)
+    s = s._replace(key=key)
+
+    # ---------------- classification ----------------
+    kind = s.next_kind
+    phase = s.phase
+    n_ops = (s.kinds >= 0).sum(axis=1)
+    done_reading = s.op_idx >= n_ops
+    in_wc = (phase == PH_WC_LOCK) | (phase == PH_WC_PREC)
+    still_wait = (phase == PH_BLOCKED) | (phase == PH_WC_LOCK)
+
+    is_att = ready & (kind == EV_ATTEMPT)
+    is_disk = ready & (kind == EV_DISK_DONE)
+    is_fl = ready & (kind == EV_FLUSH_DONE)
+    is_to = ready & (kind == EV_TIMEOUT)
+    is_rs = ready & (kind == EV_RESTART)
+
+    to_expired = is_to & still_wait & (s.deadline <= te)
+    att = is_att | (is_to & ~(still_wait & (s.deadline <= te)))
+    wc_m = att & (done_reading | in_wc)
+    read_m = att & ~(done_reading | in_wc)
+
+    # ---------------- read-phase cohort ----------------
+    op_i = jnp.minimum(s.op_idx, cfg.max_ops - 1)
+    cur_item = s.items[idx, op_i]
+    cur_w = s.kinds[idx, op_i] == jnp.int8(1)
+    ps1, verdict, sel = _try_ops_cohort(cfg, s.pstate, cur_item, cur_w,
+                                        read_m)
+    deferred = read_m & ~sel
+    proceed = sel & (verdict == P.PROCEED)
+    v_block = sel & (verdict == P.BLOCK)
+    v_abort = sel & (verdict == P.ABORT)
+    op2 = s.op_idx + proceed
+    was_last = proceed & (op2 >= n_ops)
+    rd_disk = proceed & ~cur_w
+    wr_cpu = proceed & cur_w & ~was_last
+    wr_wc = proceed & cur_w & was_last
+
+    # ---------------- wait-to-commit cohort (skipped when empty) -------
+    ps2, flush_m, wait_lock_m, wait_prec_m, wc_abort = jax.lax.cond(
+        wc_m.any(),
+        lambda ps: _wc_cohort(cfg, ps, s.dirty, wc_m),
+        lambda ps: (ps, jnp.zeros(n, bool), jnp.zeros(n, bool),
+                    jnp.zeros(n, bool), jnp.zeros(n, bool)),
+        ps1)
+    n_w = ps2.write_set.sum(axis=1).astype(jnp.int32)
+    flush_io = flush_m & (n_w > 0)
+    flush_zero = flush_m & (n_w == 0)
+
+    # ---------------- flush completions ----------------
+    left = s.flush_left - is_fl.astype(jnp.int32)
+    flush_more = is_fl & (left > 0)
+    flush_done = is_fl & (left <= 0)
+
+    # ---------------- commits / aborts ----------------
+    commit_pre = flush_zero | flush_done
+    if cfg.protocol == "occ":
+        # close the Kung-Robinson overlap window: re-validate at commit.
+        # Same-iteration committers must also validate against each
+        # other (the event engine broadcasts each commit's writes before
+        # the next commit validates) — a slot-ordered pass over the
+        # accumulated writes of lower surviving committers, taken only
+        # on multi-commit iterations.
+        def occ_validate_multi(_):
+            def vstep(acc, i):
+                fail_i = commit_pre[i] & \
+                    (ps2.read_set[i] & (s.dirty[i] | acc)).any()
+                acc = acc | jnp.where(commit_pre[i] & ~fail_i,
+                                      ps2.write_set[i], False)
+                return acc, fail_i
+            _, fails = jax.lax.scan(vstep, jnp.zeros(cfg.d, bool), idx)
+            return fails
+
+        occ_fail = jax.lax.cond(
+            commit_pre.sum() > 1, occ_validate_multi,
+            lambda _: commit_pre & (ps2.read_set & s.dirty).any(axis=1),
+            None)
+    else:
+        occ_fail = jnp.zeros(n, bool)
+    commit_now = commit_pre & ~occ_fail
+    abort_now = to_expired | v_abort | wc_abort | occ_fail
+
+    # ---------------- leave + re-begin (skipped on quiet iterations) ---
+    begin_m = commit_now | is_rs
+
+    def leave_and_begin(ps):
+        dirty = s.dirty
+        if cfg.protocol == "occ":
+            union = (commit_now[:, None] & ps.write_set).any(axis=0)
+            receivers = ps.active & ~commit_now & ~abort_now
+            dirty = dirty | (receivers[:, None] & union[None, :])
+            dirty = dirty & ~(commit_now | abort_now)[:, None]
+        ps = P.commit_many(ps, commit_now)
+        ps = P.abort_many(ps, abort_now)
+        return P.begin_many(ps, begin_m), dirty
+
+    ps5, dirty = jax.lax.cond(
+        (commit_now | abort_now | begin_m).any(),
+        leave_and_begin, lambda ps: (ps, s.dirty), ps2)
+
+    # fresh workloads are only needed on commit iterations — gate the
+    # (vmapped) sampling behind a cond so quiet iterations skip it
+    def do_sample(k):
+        return sample_txns(k, cfg, n)
+
+    def no_sample(k):
+        return (jnp.full((n, cfg.max_ops), -1, jnp.int8),
+                jnp.zeros((n, cfg.max_ops), jnp.int32))
+
+    fresh_kinds, fresh_items = jax.lax.cond(commit_now.any(), do_sample,
+                                            no_sample, kt)
+    new_kinds = jnp.where(commit_now[:, None], fresh_kinds, s.kinds)
+    new_items = jnp.where(commit_now[:, None], fresh_items, s.items)
+
+    # ---------------- resource reservations (one fused scan) -----------
+    cpu_req = wr_cpu | (is_disk & ~done_reading) | begin_m
+    disk_req = rd_disk | flush_more | flush_io
+    cpu_free, disk_free, cpu_done, disk_done = _reserve_cohort(
+        s.cpu_free, s.disk_free, te, dur_cpu, dur_io, cpu_req, disk_req)
+
+    # ---------------- transitions (masks are pairwise disjoint) --------
+    nt, nk = s.next_time, s.next_kind
+    ph, dl, fl = s.phase, s.deadline, left
+
+    def put(m, arr, val):
+        return jnp.where(m, val, arr)
+
+    # deferred read ops: retry next iteration at their own event time
+    nt = put(deferred, nt, te)
+    nk = put(deferred, nk, jnp.int8(EV_ATTEMPT))
+    # read proceeded -> disk read
+    nt = put(rd_disk, nt, disk_done)
+    nk = put(rd_disk, nk, jnp.int8(EV_DISK_DONE))
+    ph = put(rd_disk, ph, jnp.int8(PH_READ))
+    # write proceeded, not last -> next CPU burst
+    nt = put(wr_cpu, nt, cpu_done)
+    nk = put(wr_cpu, nk, jnp.int8(EV_ATTEMPT))
+    ph = put(wr_cpu, ph, jnp.int8(PH_READ))
+    # last write proceeded -> enter wait-to-commit immediately
+    nt = put(wr_wc, nt, te)
+    nk = put(wr_wc, nk, jnp.int8(EV_ATTEMPT))
+    ph = put(wr_wc, ph, jnp.int8(PH_READ))
+    # read-phase block
+    was_blocked = phase == PH_BLOCKED
+    new_dl = jnp.where(was_blocked, s.deadline, te + cfg.block_timeout)
+    dl = put(v_block, dl, new_dl)
+    ph = put(v_block, ph, jnp.int8(PH_BLOCKED))
+    nt = put(v_block, nt, new_dl)
+    nk = put(v_block, nk, jnp.int8(EV_TIMEOUT))
+    # wait-to-commit routing
+    ph = put(flush_m, ph, jnp.int8(PH_FLUSH))
+    fl = jnp.where(flush_m, n_w, fl)
+    nt = put(flush_io, nt, disk_done)
+    nk = put(flush_io, nk, jnp.int8(EV_FLUSH_DONE))
+    first_lock = phase != PH_WC_LOCK
+    lock_dl = jnp.where(first_lock, te + cfg.block_timeout, s.deadline)
+    dl = put(wait_lock_m, dl, lock_dl)
+    ph = put(wait_lock_m, ph, jnp.int8(PH_WC_LOCK))
+    nt = put(wait_lock_m, nt, lock_dl)
+    nk = put(wait_lock_m, nk, jnp.int8(EV_TIMEOUT))
+    ph = put(wait_prec_m, ph, jnp.int8(PH_WC_PREC))
+    nt = put(wait_prec_m, nt, INF)
+    nk = put(wait_prec_m, nk, jnp.int8(EV_ATTEMPT))
+    # disk completions
+    disk_cpu = is_disk & ~done_reading
+    nt = put(disk_cpu, nt, cpu_done)
+    nk = put(disk_cpu, nk, jnp.int8(EV_ATTEMPT))
+    disk_wc = is_disk & done_reading
+    nt = put(disk_wc, nt, te)
+    nk = put(disk_wc, nk, jnp.int8(EV_ATTEMPT))
+    # flush continues
+    nt = put(flush_more, nt, disk_done)
+    nk = put(flush_more, nk, jnp.int8(EV_FLUSH_DONE))
+    # aborts -> restart later
+    ph = put(abort_now, ph, jnp.int8(PH_RESTART))
+    nt = put(abort_now, nt, te + delay)
+    nk = put(abort_now, nk, jnp.int8(EV_RESTART))
+    # begins (fresh after commit / reuse after restart delay)
+    ph = put(begin_m, ph, jnp.int8(PH_READ))
+    fl = jnp.where(begin_m, 0, fl)
+    nt = put(begin_m, nt, cpu_done)
+    nk = put(begin_m, nk, jnp.int8(EV_ATTEMPT))
+    op_new = jnp.where(begin_m, 0, op2)
+
+    # wake waiters on any commit/abort
+    any_leave = (commit_now | abort_now).any()
+    waiting = (ph == PH_BLOCKED) | (ph == PH_WC_LOCK) | (ph == PH_WC_PREC)
+    nt = jnp.where(any_leave & waiting, jnp.minimum(nt, t0), nt)
+
+    new_blocks = (v_block & ~was_blocked).sum()
+    return s._replace(
+        pstate=ps5, dirty=dirty, kinds=new_kinds, items=new_items,
+        op_idx=op_new, phase=ph, next_time=nt, next_kind=nk, deadline=dl,
+        flush_left=fl, cpu_free=cpu_free, disk_free=disk_free,
+        commits=s.commits + commit_now.sum(),
+        aborts=s.aborts + abort_now.sum(),
+        blocks=s.blocks + new_blocks,
+        ops_done=s.ops_done + proceed.sum())
+
+
+def default_cohort_dt(p: SimParams) -> float:
+    """Half a mean read cycle (CPU burst + disk access): wide enough to
+    batch many completions per quantum, narrow enough that protocol
+    decisions stay fresh — commit counts track the one-event engine
+    within a few percent across the paper grid (DESIGN.md §2.3
+    discusses the trade-off)."""
+    return 0.5 * (p.cpu_burst_mean + p.io_time_mean)
+
+
+def make_engine(p: SimParams, protocol: str, max_iters: int = 400_000,
+                step_mode: str = "cohort", cohort_dt: float = None):
+    init, cond, step = engine_parts(p, protocol, max_iters=max_iters,
+                                    step_mode=step_mode,
+                                    cohort_dt=cohort_dt)
+
+    @jax.jit
+    def run(seed: jax.Array) -> EngState:
+        return jax.lax.while_loop(cond, step, init(seed))
+
+    return run
+
+
+def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
+                 step_mode: str = "cohort", cohort_dt: float = None):
+    """(init, cond, step) for single-stepping an engine from tests —
+    e.g. checking protocol invariants after every cohort step."""
+    if step_mode not in ("cohort", "event"):
+        raise ValueError(f"unknown step_mode: {step_mode!r}")
+    if cohort_dt is None:
+        cohort_dt = default_cohort_dt(p)
+    cfg = dataclasses.replace(_cfg(p, max_iters), protocol=protocol,
+                              cohort_dt=float(cohort_dt))
 
     def init(seed) -> EngState:
         key = jax.random.PRNGKey(seed)
@@ -468,29 +871,28 @@ def make_engine(p: SimParams, protocol: str, max_iters: int = 400_000):
         return (s.now <= cfg.horizon) & (s.iters < cfg.max_iters) & \
             (s.next_time.min() < 0.5 * INF)
 
-    def body(s: EngState) -> EngState:
-        i = jnp.argmin(s.next_time)
-        t = s.next_time[i]
-        s = s._replace(now=t, iters=s.iters + 1,
-                       next_time=s.next_time.at[i].set(INF))
-        return jax.lax.switch(
-            s.next_kind[i].astype(jnp.int32),
-            [functools.partial(_ev_attempt, cfg),
-             functools.partial(_ev_disk_done, cfg),
-             functools.partial(_ev_flush_done, cfg),
-             functools.partial(_ev_timeout, cfg),
-             functools.partial(_ev_restart, cfg)],
-            s, i)
+    if step_mode == "cohort":
+        step = functools.partial(_cohort_body, cfg)
+    else:
+        def step(s: EngState) -> EngState:
+            i = jnp.argmin(s.next_time)
+            s = s._replace(now=s.next_time[i], iters=s.iters + 1,
+                           next_time=s.next_time.at[i].set(INF))
+            return jax.lax.switch(
+                s.next_kind[i].astype(jnp.int32),
+                [functools.partial(_ev_attempt, cfg),
+                 functools.partial(_ev_disk_done, cfg),
+                 functools.partial(_ev_flush_done, cfg),
+                 functools.partial(_ev_timeout, cfg),
+                 functools.partial(_ev_restart, cfg)],
+                s, i)
 
-    @jax.jit
-    def run(seed: jax.Array) -> EngState:
-        return jax.lax.while_loop(cond, body, init(seed))
-
-    return run
+    return init, jax.jit(cond), jax.jit(step)
 
 
-def simulate(p: SimParams, protocol: str) -> SimResult:
-    run = make_engine(p, protocol)
+def simulate(p: SimParams, protocol: str,
+             step_mode: str = "cohort") -> SimResult:
+    run = make_engine(p, protocol, step_mode=step_mode)
     s = run(jnp.int32(p.seed))
     res = SimResult(protocol=protocol, params=p)
     res.commits = int(s.commits)
@@ -501,9 +903,10 @@ def simulate(p: SimParams, protocol: str) -> SimResult:
     return res
 
 
-def simulate_sweep(p: SimParams, protocol: str, seeds) -> Any:
+def simulate_sweep(p: SimParams, protocol: str, seeds,
+                   step_mode: str = "cohort") -> Any:
     """vmap over seeds — one SPMD computation, shardable over `data`."""
-    run = make_engine(p, protocol)
+    run = make_engine(p, protocol, step_mode=step_mode)
     final = jax.vmap(run)(jnp.asarray(seeds, jnp.int32))
     return {"commits": final.commits, "aborts": final.aborts,
             "blocks": final.blocks}

@@ -262,3 +262,302 @@ def admit_ops(s: PPCCState, txn: jax.Array, item: jax.Array,
         aborted=(verdicts == ABORT) & valid,
         state=s,
     )
+
+
+def _pack_bits(sets: jax.Array) -> jax.Array:
+    """bool[N, D] -> uint32[N, ceil(D/32)] (kernels.conflict.pack_bitsets
+    inlined to keep core free of the kernels layer)."""
+    n, d = sets.shape
+    pad = (-d) % 32
+    if pad:
+        sets = jnp.pad(sets, ((0, 0), (0, pad)))
+    x = sets.reshape(n, -1, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (x * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _any_overlap(a: jax.Array, b: jax.Array) -> jax.Array:
+    """bool[N, M] x bool[K, M] -> bool[N, K] row-pair intersection via
+    packed bitsets — the jnp twin of the Pallas conflict kernel, right
+    for the engine's small N (the scheduler's thousands-of-txns case
+    goes through ``kernels.conflict`` instead)."""
+    ap, bp = _pack_bits(a), _pack_bits(b)
+    return ((ap[:, None, :] & bp[None, :, :]) != 0).any(-1)
+
+
+# --------------------------------------------------------------------------
+# batched cohort primitives (DESIGN.md §2.3)
+#
+# The cohort-stepped engine advances many slots per ``while_loop``
+# iteration.  A vectorized protocol step applied to a *cohort* of pending
+# ops is exactly equivalent to applying them sequentially (in any order)
+# iff the ops are pairwise independent.  Op i's transition reads and
+# writes only the protocol state of its *party*:
+#
+#     party(i) = {i} ∪ {active writers of item_i}   (read op)
+#                {i} ∪ {active readers of item_i}   (write op)
+#
+# (verdict inputs: class bits and arcs of party members, the item's lock
+# word; updates: read/write-set bit of i, arcs between i and party
+# members, class bits of party members).  Read-phase ops never touch
+# lock words, so two ops commute iff their parties are disjoint and they
+# do not target the same item with a write involved (the same-item guard
+# covers the party membership the ops are *about to create*).
+# --------------------------------------------------------------------------
+
+
+def begin_many(s: PPCCState, mask: jax.Array) -> PPCCState:
+    """Activate every masked slot as a fresh independent transaction.
+
+    ``begin`` touches only slot-local rows/columns, so any set of begins
+    commutes; this is the exact batched form of ``begin`` over ``mask``.
+    """
+    m = mask
+    return s._replace(
+        read_set=s.read_set & ~m[:, None],
+        write_set=s.write_set & ~m[:, None],
+        prec=s.prec & ~m[:, None] & ~m[None, :],
+        preceding=s.preceding & ~m,
+        preceded=s.preceded & ~m,
+        active=s.active | m,
+    )
+
+
+def _op_tables(s: PPCCState, item: jax.Array):
+    """Shared gathers: (writers_at, readers_at), each [i, k] =
+    {write,read}_set[k, item[i]]."""
+    return s.write_set[:, item].T, s.read_set[:, item].T
+
+
+def op_parties(s: PPCCState, item: jax.Array, is_write: jax.Array
+               ) -> jax.Array:
+    """party[i, k]: slot i's pending op touches slot k's protocol state."""
+    writers_at, readers_at = _op_tables(s, item)
+    return _parties(s, is_write, writers_at, readers_at)
+
+
+def _parties(s, is_write, writers_at, readers_at):
+    eye = jnp.eye(s.n, dtype=bool)
+    others = jnp.where(is_write[:, None], readers_at, writers_at)
+    return (others & s.active[None, :] & ~eye) | eye
+
+
+def _select(s, item, is_write, ready, writers_at, readers_at):
+    """dep[i, j]: ops of slots i and j do not commute — their parties
+    intersect, or they target the same item with a write involved (the
+    write is about to *make* the other op's slot a party member).
+    Selected: ready slots no lower-indexed *ready* slot depends on."""
+    n = s.n
+    party = _parties(s, is_write, writers_at, readers_at)
+    dep = _any_overlap(party, party)
+    same_item = item[:, None] == item[None, :]
+    either_write = is_write[:, None] | is_write[None, :]
+    dep = (dep | (same_item & either_write)) & ~jnp.eye(n, dtype=bool)
+    lower = jnp.arange(n)[None, :] < jnp.arange(n)[:, None]
+    return ready & ~(dep & ready[None, :] & lower).any(axis=1)
+
+
+def cohort_select(s: PPCCState, item: jax.Array, is_write: jax.Array,
+                  ready: jax.Array) -> jax.Array:
+    """Pairwise-independent subset of ``ready``, in one vectorized step:
+    slot i is selected iff no lower-indexed *ready* slot's op depends on
+    it.  (A conservative relaxation of the sequential greedy set — a
+    ready slot excluded by an also-excluded lower slot just retries next
+    quantum.)  The lowest ready slot is always selected, so a
+    cohort-stepped engine makes progress every iteration.
+    """
+    writers_at, readers_at = _op_tables(s, item)
+    return _select(s, item, is_write, ready, writers_at, readers_at)
+
+
+def _try_ops(s, item, is_write, mask, writers_at, readers_at):
+    n = s.n
+    idx = jnp.arange(n, dtype=jnp.int32)
+    eye = jnp.eye(n, dtype=bool)
+
+    owner = s.locks[item]
+    locked_by_other = (owner >= 0) & (owner != idx)
+    i_prec_owner = s.prec[idx, jnp.maximum(owner, 0)]
+    lock_v = jnp.where(locked_by_other,
+                       jnp.where(i_prec_owner, ABORT, BLOCK), PROCEED)
+
+    act = s.active[None, :]
+    new_writers = writers_at & act & ~eye & ~s.prec      # read: ~prec[i, k]
+    new_readers = readers_at & act & ~eye & ~s.prec.T    # write: ~prec[k, i]
+
+    any_new_r = new_writers.any(axis=1)
+    rule_r = (~s.preceded) & ~(new_writers & s.preceding[None, :]).any(1)
+    any_new_w = new_readers.any(axis=1)
+    rule_w = (~s.preceding) & ~(new_readers & s.preceded[None, :]).any(1)
+
+    any_new = jnp.where(is_write, any_new_w, any_new_r)
+    rule_ok = jnp.where(is_write, rule_w, rule_r)
+    allowed = (lock_v == PROCEED) & (~any_new | rule_ok) & mask
+    verdict = jnp.where(lock_v != PROCEED, lock_v,
+                        jnp.where(allowed, PROCEED, BLOCK))
+    verdict = jnp.where(mask, verdict, BLOCK).astype(jnp.int32)
+
+    ok_r = allowed & ~is_write
+    ok_w = allowed & is_write
+    add_r = new_writers & ok_r[:, None]                  # arcs i -> k
+    add_w = new_readers & ok_w[:, None]                  # arcs k -> i
+    return s._replace(
+        read_set=s.read_set.at[idx, item].max(ok_r),
+        write_set=s.write_set.at[idx, item].max(ok_w),
+        prec=s.prec | add_r | add_w.T,
+        preceding=s.preceding | (ok_r & any_new_r) | add_w.any(axis=0),
+        preceded=s.preceded | (ok_w & any_new_w) | add_r.any(axis=0),
+    ), verdict
+
+
+def try_ops_batched(s: PPCCState, item: jax.Array, is_write: jax.Array,
+                    mask: jax.Array) -> Tuple[PPCCState, jax.Array]:
+    """One protocol op per slot, resolved in a single vectorized step.
+
+    Slot i (where ``mask[i]``) performs (item[i], is_write[i]) against the
+    pre-state.  Sequential equivalence requires the masked ops to be
+    pairwise independent (use ``cohort_select``).  Unmasked lanes are
+    inert and report BLOCK.  Returns (state, verdict int32[n]).
+    """
+    writers_at, readers_at = _op_tables(s, item)
+    return _try_ops(s, item, is_write, mask, writers_at, readers_at)
+
+
+def cohort_step(s: PPCCState, item: jax.Array, is_write: jax.Array,
+                ready: jax.Array
+                ) -> Tuple[PPCCState, jax.Array, jax.Array]:
+    """``cohort_select`` + ``try_ops_batched`` sharing one set of
+    gathers (the engine hot path).  Returns (state, verdict, selected).
+    """
+    writers_at, readers_at = _op_tables(s, item)
+    sel = _select(s, item, is_write, ready, writers_at, readers_at)
+    s2, verdict = _try_ops(s, item, is_write, sel, writers_at, readers_at)
+    return s2, verdict, sel
+
+
+def wc_acquire_many(s: PPCCState, mask: jax.Array, exact: bool = True
+                    ) -> Tuple[PPCCState, jax.Array]:
+    """Batched all-or-nothing wait-to-commit lock acquisition.
+
+    With ``exact=True`` (default) this matches the event engine's
+    sequential greedy semantics exactly: slot i wins iff its whole write
+    set is unlocked (or self-locked) and no lower-indexed *winner*'s
+    write set overlaps it (disjoint lock words).  ``exact=False`` uses
+    the vectorized one-step relaxation (no lower-indexed *feasible*
+    overlap) — a subset of the greedy winners; shut-out slots simply
+    wait as a sequential loser would.  Losers keep the state they had
+    (no partial locks).  Returns (state, got bool[n]).
+    """
+    n = s.n
+    idx = jnp.arange(n, dtype=jnp.int32)
+    free = (s.locks[None, :] < 0) | (s.locks[None, :] == idx[:, None])
+    feasible = mask & jnp.where(s.write_set, free, True).all(axis=1)
+    overlap = _any_overlap(s.write_set, s.write_set) & \
+        ~jnp.eye(n, dtype=bool)
+
+    if exact:
+        def step(won, i):
+            ok = feasible[i] & ~(overlap[i] & won).any()
+            return won.at[i].set(ok), ok
+
+        won, _ = jax.lax.scan(step, jnp.zeros(n, bool), idx)
+    else:
+        lower = idx[None, :] < idx[:, None]
+        won = feasible & ~(overlap & feasible[None, :] & lower).any(axis=1)
+    claim = won[:, None] & s.write_set                   # [n, d]
+    owner = jnp.max(jnp.where(claim, idx[:, None], -1), axis=0)
+    locks = jnp.where(owner >= 0, owner, s.locks)
+    return s._replace(locks=locks), won
+
+
+def can_commit_many(s: PPCCState) -> jax.Array:
+    """Vectorized Fig. 4 test: slot i may commit iff no active
+    transaction precedes it."""
+    return ~((s.prec & s.active[:, None]).any(axis=0))
+
+
+def _leave_many(s: PPCCState, mask: jax.Array) -> PPCCState:
+    keep = ~mask[:, None]
+    lock_held = (s.locks >= 0) & mask[jnp.maximum(s.locks, 0)]
+    return s._replace(
+        read_set=s.read_set & keep,
+        write_set=s.write_set & keep,
+        prec=s.prec & keep & ~mask[None, :],
+        active=s.active & ~mask,
+        locks=jnp.where(lock_held, -1, s.locks),
+    )
+
+
+def commit_many(s: PPCCState, mask: jax.Array) -> PPCCState:
+    """Batched ``commit``: exact — leaves of distinct slots commute."""
+    return _leave_many(s, mask)
+
+
+def abort_many(s: PPCCState, mask: jax.Array) -> PPCCState:
+    """Batched ``abort``: exact — leaves of distinct slots commute."""
+    return _leave_many(s, mask)
+
+
+def admit_ops_blocked(s: PPCCState, txn: jax.Array, item: jax.Array,
+                      is_write: jax.Array, valid: jax.Array,
+                      block: int = 32) -> BatchVerdict:
+    """Exactly ``admit_ops``, but blocked: the op list is cut into blocks
+    of ``block`` consecutive ops; a block whose (valid) ops are pairwise
+    independent — disjoint parties, distinct txn slots, no same-item
+    write pair — resolves in ONE vectorized ``try_ops_batched`` step,
+    otherwise it falls back to the sequential inner scan.  Either branch
+    is order-exact, so the result is bit-identical to ``admit_ops``.
+    """
+    n = s.n
+    m = txn.shape[0]
+    pad = (-m) % block
+    if pad:
+        txn = jnp.concatenate([txn, jnp.zeros(pad, txn.dtype)])
+        item = jnp.concatenate([item, jnp.zeros(pad, item.dtype)])
+        is_write = jnp.concatenate([is_write, jnp.zeros(pad, bool)])
+        valid = jnp.concatenate([valid, jnp.zeros(pad, bool)])
+    nb = txn.shape[0] // block
+    ops = jax.tree.map(lambda a: a.reshape(nb, block),
+                       (txn, item, is_write, valid))
+
+    def blk(s: PPCCState, op):
+        t, x, w, v = op
+        me = jnp.arange(n)[None, :] == t[:, None]        # [B, n]
+        others = jnp.where(w[:, None], s.read_set[:, x].T,
+                           s.write_set[:, x].T)
+        party = (others & s.active[None, :] & ~me) | me
+        dep = _any_overlap(party, party)
+        dep = dep | ((x[:, None] == x[None, :]) & (w[:, None] | w[None, :]))
+        dep = dep | (t[:, None] == t[None, :])
+        dep = dep & ~jnp.eye(block, dtype=bool)
+        dep = dep & v[:, None] & v[None, :]
+        indep = ~dep.any()
+
+        def fast(s: PPCCState):
+            # scatter one op per slot; invalid lanes dropped via OOB index
+            tgt = jnp.where(v, t, n)
+            mask_full = jnp.zeros(n, bool).at[tgt].set(v, mode="drop")
+            item_full = jnp.zeros(n, x.dtype).at[tgt].set(x, mode="drop")
+            w_full = jnp.zeros(n, bool).at[tgt].set(w, mode="drop")
+            s2, verd_full = try_ops_batched(s, item_full, w_full, mask_full)
+            return s2, verd_full[jnp.minimum(t, n - 1)]
+
+        def slow(s: PPCCState):
+            def step(s, op1):
+                t1, x1, w1, v1 = op1
+                s2, verdict = try_op(s, t1, x1, w1)
+                s2 = jax.tree.map(lambda a, b: jnp.where(v1, a, b), s2, s)
+                return s2, jnp.where(v1, verdict, BLOCK)
+            return jax.lax.scan(step, s, (t, x, w, v))
+
+        return jax.lax.cond(indep, fast, slow, s)
+
+    s, verds = jax.lax.scan(blk, s, ops)
+    verdicts = verds.reshape(-1)[:m]
+    valid = valid.reshape(-1)[:m] if pad else valid[:m]
+    return BatchVerdict(
+        admitted=(verdicts == PROCEED) & valid,
+        blocked=(verdicts == BLOCK) & valid,
+        aborted=(verdicts == ABORT) & valid,
+        state=s,
+    )

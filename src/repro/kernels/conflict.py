@@ -57,6 +57,79 @@ def conflict_matrix(read_bits: jax.Array, write_bits: jax.Array, *,
     )(read_bits, write_bits)
 
 
+def _conflict_fused_kernel(r_ref, wi_ref, wj_ref, raw_ref, ww_ref,
+                           rdeg_ref, wdeg_ref, *, words: int, chunk: int):
+    """One pass over the word dimension emits BOTH conflict relations —
+    raw[i, j] = any(read[i] & write[j]) and ww[i, j] = any(write[i] &
+    write[j]) — plus per-row popcount degrees, accumulated across the j
+    grid dimension (same output block revisited; j iterates fastest)."""
+    j = pl.program_id(1)
+    raw_acc = jnp.zeros(raw_ref.shape, jnp.bool_)
+    ww_acc = jnp.zeros(ww_ref.shape, jnp.bool_)
+    for w0 in range(0, words, chunk):
+        w1 = min(w0 + chunk, words)
+        r = r_ref[:, w0:w1]                     # [bi, c] uint32
+        wi = wi_ref[:, w0:w1]                   # [bi, c]
+        wj = wj_ref[:, w0:w1]                   # [bj, c]
+        raw_acc = raw_acc | ((r[:, None, :] & wj[None, :, :]) != 0
+                             ).any(axis=-1)
+        ww_acc = ww_acc | ((wi[:, None, :] & wj[None, :, :]) != 0
+                           ).any(axis=-1)
+    raw_ref[...] = raw_acc
+    ww_ref[...] = ww_acc
+
+    @pl.when(j == 0)
+    def _init():
+        rdeg_ref[...] = jnp.zeros(rdeg_ref.shape, jnp.int32)
+        wdeg_ref[...] = jnp.zeros(wdeg_ref.shape, jnp.int32)
+
+    rdeg_ref[...] += raw_acc.sum(axis=1).astype(jnp.int32)
+    wdeg_ref[...] += ww_acc.sum(axis=1).astype(jnp.int32)
+
+
+def conflict_fused(read_bits: jax.Array, write_bits: jax.Array, *,
+                   block: int = 256, word_chunk: int = 128,
+                   interpret: bool = False):
+    """Single-launch fusion of ``conflict_matrix(rb, wb)`` and
+    ``conflict_matrix(wb, wb)``.
+
+    Returns (raw bool[N, N], ww bool[N, N], raw_deg int32[N],
+    ww_deg int32[N]); degrees are per-row popcounts INCLUDING the
+    diagonal (callers mask self-conflicts as they see fit).  Bit-wise
+    identical to the two separate launches; the fused pass reads each
+    write-bitset tile once for both relations instead of twice.
+    """
+    n, w = read_bits.shape
+    assert write_bits.shape == (n, w)
+    bi = min(block, n)
+    assert n % bi == 0, (n, bi)
+    grid = (n // bi, n // bi)
+    kernel = functools.partial(_conflict_fused_kernel, words=w,
+                               chunk=word_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bi, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bi, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bi, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.bool_),
+            jax.ShapeDtypeStruct((n, n), jnp.bool_),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(read_bits, write_bits, write_bits)
+
+
 def pack_bitsets(sets: jax.Array) -> jax.Array:
     """bool[N, D] -> uint32[N, ceil(D/32)] packed bitsets."""
     n, d = sets.shape

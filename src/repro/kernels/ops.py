@@ -40,6 +40,14 @@ def conflict_matrix(read_bits, write_bits, *, block: int = 256):
         interpret=_interpret_default())
 
 
+@functools.partial(jax.jit, static_argnames=("block",))
+def conflict_fused(read_bits, write_bits, *, block: int = 256):
+    """One launch -> (raw, ww, raw_deg, ww_deg); see kernels.conflict."""
+    return _conflict.conflict_fused(
+        read_bits, write_bits, block=block,
+        interpret=_interpret_default())
+
+
 pack_bitsets = jax.jit(_conflict.pack_bitsets)
 
 

@@ -41,6 +41,15 @@ def conflict_matrix_ref(read_bits: jax.Array, write_bits: jax.Array
             ).any(axis=-1)
 
 
+def conflict_fused_ref(read_bits: jax.Array, write_bits: jax.Array):
+    """Oracle for the fused one-pass kernel: (raw, ww, raw_deg, ww_deg).
+    Degrees are per-row popcounts including the diagonal."""
+    raw = conflict_matrix_ref(read_bits, write_bits)
+    ww = conflict_matrix_ref(write_bits, write_bits)
+    return (raw, ww, raw.sum(axis=1).astype(jnp.int32),
+            ww.sum(axis=1).astype(jnp.int32))
+
+
 def wkv_ref(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
             u: jax.Array, head_dim: int,
             state0: Optional[jax.Array] = None):

@@ -40,19 +40,22 @@ class TickResult(NamedTuple):
 
 
 def _conflict_matrices(read_bits: jax.Array, write_bits: jax.Array,
-                       use_kernel: bool) -> Tuple[jax.Array, jax.Array]:
-    """(raw[i,j]: i reads what j writes, ww[i,j]: write/write overlap)."""
+                       use_kernel: bool
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """(raw[i,j]: i reads what j writes, ww[i,j]: write/write overlap,
+    raw_deg[i], ww_deg[i]: per-row popcount degrees incl. diagonal).
+
+    One fused Pallas launch emits both relations and the degrees; the
+    degrees feed the degree-ordered admission heuristic below."""
     if use_kernel:
-        raw = kops.conflict_matrix(read_bits, write_bits)
-        ww = kops.conflict_matrix(write_bits, write_bits)
-    else:
-        raw = kops.ref.conflict_matrix_ref(read_bits, write_bits)
-        ww = kops.ref.conflict_matrix_ref(write_bits, write_bits)
-    return raw, ww
+        return kops.conflict_fused(read_bits, write_bits)
+    return kops.ref.conflict_fused_ref(read_bits, write_bits)
 
 
 def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
-              valid: jax.Array, use_kernel: bool = True) -> TickResult:
+              valid: jax.Array, use_kernel: bool = True,
+              order: str = "priority") -> TickResult:
     """Admit a batch of single-shot transactions under PPCC.
 
     read_sets/write_sets: bool[n, d]; valid: bool[n].  Each transaction
@@ -71,11 +74,28 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
     WAW alone imposes no precedence (paper Section 2.1); commit order is
     preceding-class transactions first (any topological order of the
     path-length <= 1 DAG).
+
+    ``order="degree"`` admits in ascending conflict-degree order (the
+    fused kernel's per-row popcounts) instead of priority order:
+    low-conflict transactions claim their arcs first, which admits
+    larger batches under contention at the cost of strict priority.
     """
     n, d = read_sets.shape
     rb = kops.pack_bitsets(read_sets)
     wb = kops.pack_bitsets(write_sets)
-    raw, _ = _conflict_matrices(rb, wb, use_kernel)  # raw[i,j]: i reads j's writes
+    raw, ww, raw_deg, ww_deg = _conflict_matrices(rb, wb, use_kernel)
+    if order == "degree":
+        # total involvement = RAW out-degree (kernel row popcounts)
+        # + WAR in-degree (column sums of the materialized raw)
+        # + WW degree; kernel degrees include the diagonal and
+        # self-conflicts are not conflicts here, so strip it everywhere
+        self_r = jnp.diagonal(raw).astype(jnp.int32)
+        deg = (raw_deg - self_r
+               + raw.sum(axis=0, dtype=jnp.int32) - self_r
+               + ww_deg - jnp.diagonal(ww).astype(jnp.int32))
+        seq = jnp.argsort(deg, stable=True).astype(jnp.int32)
+    else:
+        seq = jnp.arange(n, dtype=jnp.int32)
     raw = raw & ~jnp.eye(n, dtype=bool)              # self-RAW is not a conflict
 
     def step(carry, i):
@@ -97,12 +117,13 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
     init = (jnp.zeros(n, bool), jnp.zeros(n, bool), jnp.zeros(n, bool),
             jnp.zeros((n, n), bool))
     (admitted, preceding, preceded, prec), _ = jax.lax.scan(
-        step, init, jnp.arange(n, dtype=jnp.int32))
+        step, init, seq)
     # commit order: preceding-class (readers) first
     rank_key = jnp.where(admitted, preceded.astype(jnp.int32), 2 ** 30)
-    order = jnp.argsort(rank_key, stable=True)
+    commit_order = jnp.argsort(rank_key, stable=True)
     commit_rank = jnp.full((n,), -1, jnp.int32)
-    commit_rank = commit_rank.at[order].set(jnp.arange(n, dtype=jnp.int32))
+    commit_rank = commit_rank.at[commit_order].set(
+        jnp.arange(n, dtype=jnp.int32))
     commit_rank = jnp.where(admitted, commit_rank, -1)
     s = ppcc.init_state(n, 1)
     s = s._replace(prec=prec, preceding=preceding, preceded=preceded,
@@ -118,7 +139,7 @@ def twopl_tick(read_sets: jax.Array, write_sets: jax.Array,
     n, d = read_sets.shape
     rb = kops.pack_bitsets(read_sets)
     wb = kops.pack_bitsets(write_sets)
-    raw, ww = _conflict_matrices(rb, wb, use_kernel)
+    raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
     conflict = raw | raw.T | ww            # any lock conflict
     conflict = conflict & ~jnp.eye(n, dtype=bool)
 
@@ -142,7 +163,7 @@ def occ_tick(read_sets: jax.Array, write_sets: jax.Array,
     n, d = read_sets.shape
     rb = kops.pack_bitsets(read_sets)
     wb = kops.pack_bitsets(write_sets)
-    raw, ww = _conflict_matrices(rb, wb, use_kernel)
+    raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
     bad = raw | ww                          # i conflicts with j's writes
 
     def step(survivors, i):
@@ -163,7 +184,12 @@ def occ_tick(read_sets: jax.Array, write_sets: jax.Array,
 POLICIES = {"ppcc": ppcc_tick, "2pl": twopl_tick, "occ": occ_tick}
 
 
-@functools.partial(jax.jit, static_argnames=("policy",))
+@functools.partial(jax.jit, static_argnames=("policy", "order"))
 def tick(read_sets: jax.Array, write_sets: jax.Array, valid: jax.Array,
-         policy: str = "ppcc") -> TickResult:
+         policy: str = "ppcc", order: str = "priority") -> TickResult:
+    if policy == "ppcc":
+        return ppcc_tick(read_sets, write_sets, valid, order=order)
+    if order != "priority":
+        raise ValueError(
+            f"order={order!r} is only supported for policy='ppcc'")
     return POLICIES[policy](read_sets, write_sets, valid)

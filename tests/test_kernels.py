@@ -53,6 +53,28 @@ def test_conflict_matrix(n, w, block):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
 
 
+@pytest.mark.parametrize("n,w,block", [(128, 4, 64), (256, 32, 128),
+                                       (512, 7, 256)])
+def test_conflict_fused_bit_identical(n, w, block):
+    """The fused one-pass kernel must match the two-launch path bit for
+    bit, and its degrees the reference popcounts."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    rb = jax.random.bits(ks[0], (n, w), jnp.uint32)
+    wb = jax.random.bits(ks[1], (n, w), jnp.uint32)
+    raw, ww, rdeg, wdeg = ops.conflict_fused(rb, wb, block=block)
+    np.testing.assert_array_equal(
+        np.asarray(raw), np.asarray(ops.conflict_matrix(rb, wb,
+                                                        block=block)))
+    np.testing.assert_array_equal(
+        np.asarray(ww), np.asarray(ops.conflict_matrix(wb, wb,
+                                                       block=block)))
+    eraw, eww, erdeg, ewdeg = ref.conflict_fused_ref(rb, wb)
+    np.testing.assert_array_equal(np.asarray(raw), np.asarray(eraw))
+    np.testing.assert_array_equal(np.asarray(ww), np.asarray(eww))
+    np.testing.assert_array_equal(np.asarray(rdeg), np.asarray(erdeg))
+    np.testing.assert_array_equal(np.asarray(wdeg), np.asarray(ewdeg))
+
+
 def test_pack_bitsets_roundtrip():
     rng = np.random.default_rng(0)
     sets = rng.random((64, 100)) < 0.3

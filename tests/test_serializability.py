@@ -2,6 +2,7 @@
 (acyclic serialization graph — paper Theorem 2 for PPCC; 2PL/OCC are the
 provably-correct baselines)."""
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pysim import is_acyclic, serialization_graph, simulate

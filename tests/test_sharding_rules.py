@@ -12,8 +12,9 @@ from repro.launch import specs as specs_mod
 from repro.models import LM
 from repro.parallel import sharding as shd
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# jax 0.4.37 AbstractMesh takes ((name, size), ...) pairs
+MESH1 = AbstractMesh((("data", 16), ("model", 16)))
+MESH2 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def axis_size(mesh, axes):
