@@ -6,20 +6,29 @@ Protocol for High Data Contention Database Environments" (IJDMS 2016).
 * ``fig5`` .. ``fig16``: throughput-vs-MPL curves for PPCC / 2PL / OCC
   under the paper's parameter grid (Table 1), reporting peak throughput
   and the PPCC improvement over 2PL / OCC next to the paper's numbers.
+  Each figure's (protocol x MPL x seed) grid runs as ONE compiled
+  padded-lane fleet (``repro.core.sweep``, DESIGN.md §2.4); ``--oracle``
+  additionally cross-checks mid-grid points against the event-heap
+  Python oracle (``repro.core.pysim``).
+* ``sweep``: fleet sweep vs the per-point cohort-engine loop on the
+  fig7 grid; writes ``BENCH_sweep.json``.
 * ``sched_admit``: PPCC batch-scheduler admission throughput (tensorised
   protocol, jit).
-* ``kernel_*``: Pallas kernel wall time in interpret mode (correctness
-  path; TPU perf comes from the §Roofline dry-run numbers, not CPU
-  wall-time).
+* ``kernel_*``: Pallas kernel wall time.  On non-TPU backends the rows
+  are interpret-mode (correctness-path) timings and labelled as such;
+  a compiled-path row is emitted only when a real accelerator backs the
+  kernel.
 
 Output: ``name,us_per_call,derived`` CSV per line.
 
 Default horizon is 20k time units for CI speed; ``--full`` runs the
-paper's 100k horizon (matches EXPERIMENTS.md §Repro numbers).
+paper's 100k horizon (matches EXPERIMENTS.md §Repro numbers);
+``--horizon`` overrides either (CI smoke uses a tiny value).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 from pathlib import Path
@@ -28,55 +37,69 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core.pysim import simulate  # noqa: E402
-from repro.core.types import (PAPER_PEAKS, SimParams,  # noqa: E402
-                              paper_figure_params)
-
 MPL_GRID = (5, 10, 25, 50, 75, 100, 150)
 HORIZON = 20_000.0
 SEEDS = (0,)
+PROTOCOLS = ("ppcc", "2pl", "occ")
 
 
 def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def run_figure(fig: int, horizon: float, seeds=SEEDS, mpl_grid=MPL_GRID):
-    base = paper_figure_params(fig)
-    peaks = {}
-    curves = {}
-    wall = {}
-    for proto in ("ppcc", "2pl", "occ"):
-        t0 = time.time()
-        curve = []
-        for mpl in mpl_grid:
-            commits = 0
-            for seed in seeds:
-                p = base.with_(mpl=mpl, horizon=horizon, seed=seed)
-                commits += simulate(p, proto).commits
-            curve.append(commits / len(seeds))
-        curves[proto] = curve
-        peaks[proto] = max(curve)
-        wall[proto] = (time.time() - t0) * 1e6
+def run_figure(fig: int, horizon: float, seeds=SEEDS, mpl_grid=MPL_GRID,
+               oracle: bool = False):
+    """One figure's grid through the padded-lane fleet (one executable)."""
+    from repro.core import sweep as fleet_sweep
+    from repro.core.types import PAPER_PEAKS
+
+    t0 = time.time()
+    out, _fleet = fleet_sweep.run_fleet(fig, mpl_grid, seeds, horizon)
+    wall = (time.time() - t0) * 1e6
+    peaks, curves = {}, {}
+    for proto in PROTOCOLS:
+        curve = out[proto]["commits"].mean(axis=1)
+        curves[proto] = [float(c) for c in curve]
+        peaks[proto] = float(curve.max())
     imp_2pl = 100.0 * (peaks["ppcc"] - peaks["2pl"]) / max(peaks["2pl"], 1)
     imp_occ = 100.0 * (peaks["ppcc"] - peaks["occ"]) / max(peaks["occ"], 1)
     ref = PAPER_PEAKS[fig]
     scale = horizon / 100_000.0
-    for proto in ("ppcc", "2pl", "occ"):
-        ref_peak = dict(zip(("ppcc", "2pl", "occ"), ref))[proto]
-        _row(f"fig{fig}_{proto}_peak", wall[proto],
+    for proto in PROTOCOLS:
+        ref_peak = dict(zip(PROTOCOLS, ref))[proto]
+        _row(f"fig{fig}_{proto}_peak", wall,
              f"peak={peaks[proto]:.0f} paper={ref_peak}"
-             f" paper_scaled={ref_peak * scale:.0f}")
-    _row(f"fig{fig}_improvement", sum(wall.values()),
+             f" paper_scaled={ref_peak * scale:.0f} wall=fleet-total")
+    _row(f"fig{fig}_improvement", wall,
          f"ppcc_vs_2pl={imp_2pl:+.1f}% ppcc_vs_occ={imp_occ:+.1f}%")
+    if oracle:
+        _oracle_rows(fig, horizon, mpl_grid, out)
     return peaks, curves
+
+
+def _oracle_rows(fig: int, horizon: float, mpl_grid, out) -> None:
+    """pysim stays the per-point oracle: cross-check a mid-grid point."""
+    from repro.core.pysim import simulate as py_simulate
+    from repro.core.types import paper_figure_params
+
+    base = paper_figure_params(fig)
+    mid = mpl_grid[len(mpl_grid) // 2]
+    mi = list(mpl_grid).index(mid)
+    for proto in PROTOCOLS:
+        t0 = time.time()
+        ref = py_simulate(base.with_(mpl=mid, horizon=horizon, seed=0),
+                          proto).commits
+        us = (time.time() - t0) * 1e6
+        fleet_c = float(out[proto]["commits"][mi].mean())
+        _row(f"fig{fig}_{proto}_oracle_mpl{mid}", us,
+             f"fleet_commits={fleet_c:.0f} pysim_commits={ref}")
 
 
 def make_fig_fn(fig: int):
     def f(args):
-        horizon = 100_000.0 if args.full else HORIZON
+        horizon = args.horizon or (100_000.0 if args.full else HORIZON)
         seeds = (0, 1, 2) if args.full else SEEDS
-        run_figure(fig, horizon, seeds=seeds)
+        run_figure(fig, horizon, seeds=seeds, oracle=args.oracle)
     f.__name__ = f"fig{fig}"
     return f
 
@@ -102,8 +125,7 @@ def _sched_admit_us():
         s = ppcc.begin(s, jnp.int32(i))
     out = {}
     for name, fn in (("scan", jax.jit(ppcc.admit_ops)),
-                     ("blocked", jax.jit(lambda *a: ppcc.admit_ops_blocked(
-                         *a, block=32)))):
+                     ("blocked", jax.jit(ppcc.admit_ops_blocked))):
         r = fn(s, txn, item, wr, valid)           # compile
         jax.block_until_ready(r.admitted)
         t0 = time.time()
@@ -142,39 +164,56 @@ def kernel_flash(args):
          f"flops={flops:.2e} note=interpret-mode-correctness-path")
 
 
-def _kernel_conflict_us():
+def _kernel_conflict_us(interpret: bool = True):
     """µs for the two-launch path vs the fused one-pass kernel."""
     import jax
     import jax.numpy as jnp
-    from repro.kernels import ops
+    from repro.kernels import conflict as C
     kr, kw = jax.random.split(jax.random.PRNGKey(0))
     rb = jax.random.bits(kr, (512, 128), jnp.uint32)
     wb = jax.random.bits(kw, (512, 128), jnp.uint32)
 
-    def two_launch():
-        return ops.conflict_matrix(rb, wb), ops.conflict_matrix(wb, wb)
-
-    def fused():
-        return ops.conflict_fused(rb, wb)
+    two_launch = jax.jit(lambda r, w: (
+        C.conflict_matrix(r, w, interpret=interpret),
+        C.conflict_matrix(w, w, interpret=interpret)))
+    fused = jax.jit(lambda r, w: C.conflict_fused(r, w,
+                                                  interpret=interpret))
 
     out = {}
     for name, fn in (("two_launch", two_launch), ("fused", fused)):
-        jax.block_until_ready(fn())               # compile
+        jax.block_until_ready(fn(rb, wb))         # compile
         t0 = time.time()
-        jax.block_until_ready(fn())
+        jax.block_until_ready(fn(rb, wb))
         out[name] = (time.time() - t0) * 1e6
     return out
 
 
 def kernel_conflict(args):
-    out = _kernel_conflict_us()
+    """Interpret-mode rows time the CPU correctness path (the kernel
+    body runs op-by-op in Python) — they are NOT device performance and
+    the fused kernel is *expected* to read slower there because it also
+    emits WW + degrees per grid step (DESIGN.md §3).  A compiled-path
+    row is added only when a real accelerator executes the kernel."""
+    import jax
+    out = _kernel_conflict_us(interpret=True)
     for name, us in out.items():
         _row(f"kernel_conflict_{name}_interpret", us,
-             f"pairs={512 * 512} note=interpret-mode-correctness-path")
+             f"pairs={512 * 512} note=interpret-mode-correctness-path"
+             "-not-device-perf")
+    if jax.default_backend() in ("tpu", "gpu"):
+        out = _kernel_conflict_us(interpret=False)
+        for name, us in out.items():
+            _row(f"kernel_conflict_{name}_compiled", us,
+                 f"pairs={512 * 512} backend={jax.default_backend()}")
+    else:
+        _row("kernel_conflict_compiled", 0.0,
+             f"skipped=no-accelerator backend={jax.default_backend()}")
 
 
 def jaxsim_parity(args):
     """Tensorised JAX simulator vs the event-heap oracle."""
+    from repro.core.pysim import simulate as py_simulate
+    from repro.core.types import SimParams
     try:
         from repro.core import jaxsim
     except ImportError:
@@ -185,7 +224,7 @@ def jaxsim_parity(args):
     t0 = time.time()
     jres = jaxsim.simulate(p, "ppcc")
     us = (time.time() - t0) * 1e6
-    pres = simulate(p, "ppcc")
+    pres = py_simulate(p, "ppcc")
     _row("jaxsim_parity", us,
          f"jax_commits={jres.commits} pysim_commits={pres.commits}")
 
@@ -199,8 +238,9 @@ def engine(args):
     import jax
     import jax.numpy as jnp
     from repro.core import jaxsim
+    from repro.core.types import paper_figure_params
 
-    horizon = 100_000.0 if args.full else HORIZON
+    horizon = args.horizon or (100_000.0 if args.full else HORIZON)
     seeds = jnp.arange(3 if args.full else 2, dtype=jnp.int32)
     base = paper_figure_params(7)
     points = {}
@@ -255,6 +295,99 @@ def engine(args):
     _row("engine_json", 0.0, f"wrote={path}")
 
 
+def sweep(args):
+    """Fleet sweep vs the per-point cohort-engine loop on the fig7 grid
+    (3 protocols x 7 MPL points x 2 seeds).  Before = one
+    ``jaxsim.simulate`` call per (protocol, mpl, seed) point — the
+    natural jax-engine drop-in for the old harness's per-point pysim
+    loop, and the comparator the issue names: each point pays a fresh
+    trace + XLA compile because the slot count is baked into the trace
+    shape.  (The pysim oracle loop itself is slower still, so the
+    recorded speedup is conservative.)  After = ONE compiled padded-lane
+    fleet executable.  Emits CSV rows and ``BENCH_sweep.json``."""
+    import json
+    import jax
+    from repro.core import jaxsim
+    from repro.core import sweep as fleet_sweep
+    from repro.core.types import paper_figure_params
+
+    horizon = args.horizon or (100_000.0 if args.full else HORIZON)
+    seeds = (0, 1, 2) if args.full else (0, 1)
+    base = paper_figure_params(7)
+
+    # ---- before: per-point loop (fresh engine + compile per point) ----
+    t0 = time.time()
+    per_point = {}
+    for proto in PROTOCOLS:
+        curve = []
+        for mpl in MPL_GRID:
+            tot = 0
+            for seed in seeds:
+                p = base.with_(mpl=mpl, horizon=horizon, seed=seed)
+                tot += jaxsim.simulate(p, proto).commits
+            curve.append(tot / len(seeds))
+        per_point[proto] = curve
+    before_s = time.time() - t0
+    _row("sweep_fig7_per_point_loop", before_s * 1e6,
+         f"points={len(PROTOCOLS) * len(MPL_GRID) * len(seeds)}"
+         f" recompiles_per_point=1")
+
+    # ---- after: one compiled fleet executable ------------------------
+    t0 = time.time()
+    out, fleet = fleet_sweep.run_fleet(7, MPL_GRID, seeds, horizon)
+    after_s = time.time() - t0
+    t0 = time.time()
+    jax.block_until_ready(fleet(MPL_GRID, seeds))
+    rerun_s = time.time() - t0
+    _row("sweep_fig7_fleet", after_s * 1e6,
+         f"traces={fleet.traces} n_slots={fleet.n_slots}"
+         f" speedup={before_s / after_s:.2f}x rerun_s={rerun_s:.1f}")
+
+    fleet_curves = {proto: [float(c) for c in
+                            out[proto]["commits"].mean(axis=1)]
+                    for proto in PROTOCOLS}
+    # statistical parity: padded fleet lanes vs the per-point engines
+    # (different RNG streams — shapes differ — so tolerance, not equality)
+    rel = [abs(f - p) / max(p, 1.0)
+           for proto in PROTOCOLS
+           for f, p in zip(fleet_curves[proto], per_point[proto])]
+    _row("sweep_fig7_parity", 0.0,
+         f"mean_rel_commit_diff={sum(rel) / len(rel):.3f}"
+         f" max_rel_commit_diff={max(rel):.3f}")
+
+    payload = {
+        "meta": {"fig": 7, "horizon": horizon, "seeds": len(seeds),
+                 "mpl_grid": list(MPL_GRID),
+                 "protocols": list(PROTOCOLS),
+                 "n_slots": fleet.n_slots,
+                 "devices": jax.device_count(),
+                 "sharded": fleet.mesh is not None,
+                 "source": "benchmarks/run.py --only sweep"},
+        "before_per_point_loop": {
+            "wall_s": round(before_s, 1),
+            "what": "per-point cohort-engine loop: jaxsim.simulate per "
+                    "(protocol, mpl, seed), fresh trace + XLA compile "
+                    "per point (the jax drop-in for the old per-point "
+                    "pysim loop, which is slower still)",
+            "commits_mean": per_point,
+        },
+        "after_fleet": {
+            "wall_s": round(after_s, 1),
+            "rerun_wall_s": round(rerun_s, 1),
+            "traces": fleet.traces,
+            "commits_mean": fleet_curves,
+            "iters_max": {proto: int(out[proto]["iters"].max())
+                          for proto in PROTOCOLS},
+        },
+        "speedup": round(before_s / after_s, 2),
+        "parity": {"mean_rel_commit_diff": round(sum(rel) / len(rel), 4),
+                   "max_rel_commit_diff": round(max(rel), 4)},
+    }
+    path = Path(args.sweep_json_out)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    _row("sweep_json", 0.0, f"wrote={path}")
+
+
 BENCHES = dict(FIGS)
 BENCHES.update(
     sched_admit=sched_admit,
@@ -262,6 +395,7 @@ BENCHES.update(
     kernel_conflict=kernel_conflict,
     jaxsim_parity=jaxsim_parity,
     engine=engine,
+    sweep=sweep,
 )
 
 
@@ -271,15 +405,36 @@ def main() -> None:
                     help="comma-separated bench names")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 100k-time-unit simulations")
+    ap.add_argument("--horizon", type=float, default=None,
+                    help="override the simulation horizon (time units); "
+                         "CI smoke uses a tiny value")
+    ap.add_argument("--oracle", action="store_true",
+                    help="cross-check fig grids against the pysim "
+                         "per-point oracle at a mid-grid MPL")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N XLA host devices (set BEFORE jax "
+                         "import) so fleet sweeps shard lanes over the "
+                         "data mesh axis")
     ap.add_argument("--json-out",
                     default=str(Path(__file__).resolve().parents[1]
                                 / "BENCH_engine.json"),
                     help="where the `engine` bench writes its JSON")
+    ap.add_argument("--sweep-json-out",
+                    default=str(Path(__file__).resolve().parents[1]
+                                / "BENCH_sweep.json"),
+                    help="where the `sweep` bench writes its JSON")
     args = ap.parse_args()
-    # `engine` runs 6 full sweeps and rewrites BENCH_engine.json —
+    if args.host_devices:
+        assert "jax" not in sys.modules, \
+            "--host-devices must be applied before jax is imported"
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.host_devices}").strip()
+    # `engine` / `sweep` run full grids and rewrite their BENCH json —
     # opt-in via --only, never part of the default figure run
     names = (args.only.split(",") if args.only
-             else [n for n in BENCHES if n != "engine"])
+             else [n for n in BENCHES if n not in ("engine", "sweep")])
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name](args)

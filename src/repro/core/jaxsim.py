@@ -34,6 +34,17 @@ All three protocols run on the same tensor state:
 sweep into one SPMD computation; ``examples/ppcc_sweep.py`` shards such
 a sweep over the production mesh's data axis.
 
+MPL can additionally be a *runtime* parameter (DESIGN.md §2.4): the
+slot axis pads to a static bucket and ``make_padded_engine`` returns
+``run(seed, mpl)`` where only the first ``mpl`` slots ever activate —
+one compiled executable serves every MPL point.  ``repro.core.sweep``
+builds on this to run a whole (protocol × MPL × seed) figure grid as a
+single jitted fleet call, optionally shard_map-ed over the host mesh.
+Fleet engines (``fleet=True``) drop the quiet-iteration ``lax.cond``
+gates (under vmap they decay to select-both-branches) and draw fresh
+transactions from a pre-sampled pool (``pool > 0``) instead of calling
+``sample_txns`` in-loop.
+
 Semantics are validated statistically against the oracle in
 ``tests/test_jaxsim_vs_pysim.py`` (same model, different tie-breaking).
 """
@@ -78,6 +89,9 @@ class EngState(NamedTuple):
     blocks: jax.Array
     ops_done: jax.Array
     iters: jax.Array
+    pool_kinds: jax.Array        # int8[P, L] pre-sampled txn pool (P=0: off)
+    pool_items: jax.Array        # int32[P, L]
+    pool_next: jax.Array         # int32 next pool row to hand out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +114,13 @@ class EngCfg:
     horizon: float
     max_iters: int
     cohort_dt: float = 0.0       # time-quantum width for cohort stepping
+    fleet: bool = False          # body will run under vmap lanes: drop the
+                                 # quiet-iteration lax.cond gates (they decay
+                                 # to full-state selects under batching)
+    pool: int = 0                # >0: pre-sample this many transactions at
+                                 # init and pop on commit instead of calling
+                                 # sample_txns per iteration (fleet hot-path:
+                                 # in-loop sampling was ~2/3 of body cost)
 
 
 def _cfg(p: SimParams, max_iters: int) -> EngCfg:
@@ -650,12 +671,20 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
     wr_wc = proceed & cur_w & was_last
 
     # ---------------- wait-to-commit cohort (skipped when empty) -------
-    ps2, flush_m, wait_lock_m, wait_prec_m, wc_abort = jax.lax.cond(
-        wc_m.any(),
-        lambda ps: _wc_cohort(cfg, ps, s.dirty, wc_m),
-        lambda ps: (ps, jnp.zeros(n, bool), jnp.zeros(n, bool),
-                    jnp.zeros(n, bool), jnp.zeros(n, bool)),
-        ps1)
+    # The lax.cond gates in this body are pure perf guards: each branch
+    # is exact under an all-False mask.  Under vmap (fleet lanes) a cond
+    # decays into computing BOTH branches plus a full-state select, so
+    # fleet bodies run the masked computation directly instead.
+    if cfg.fleet:
+        ps2, flush_m, wait_lock_m, wait_prec_m, wc_abort = \
+            _wc_cohort(cfg, ps1, s.dirty, wc_m)
+    else:
+        ps2, flush_m, wait_lock_m, wait_prec_m, wc_abort = jax.lax.cond(
+            wc_m.any(),
+            lambda ps: _wc_cohort(cfg, ps, s.dirty, wc_m),
+            lambda ps: (ps, jnp.zeros(n, bool), jnp.zeros(n, bool),
+                        jnp.zeros(n, bool), jnp.zeros(n, bool)),
+            ps1)
     n_w = ps2.write_set.sum(axis=1).astype(jnp.int32)
     flush_io = flush_m & (n_w > 0)
     flush_zero = flush_m & (n_w == 0)
@@ -684,10 +713,13 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
             _, fails = jax.lax.scan(vstep, jnp.zeros(cfg.d, bool), idx)
             return fails
 
-        occ_fail = jax.lax.cond(
-            commit_pre.sum() > 1, occ_validate_multi,
-            lambda _: commit_pre & (ps2.read_set & s.dirty).any(axis=1),
-            None)
+        if cfg.fleet:
+            occ_fail = occ_validate_multi(None)
+        else:
+            occ_fail = jax.lax.cond(
+                commit_pre.sum() > 1, occ_validate_multi,
+                lambda _: commit_pre & (ps2.read_set & s.dirty).any(axis=1),
+                None)
     else:
         occ_fail = jnp.zeros(n, bool)
     commit_now = commit_pre & ~occ_fail
@@ -703,13 +735,26 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
             receivers = ps.active & ~commit_now & ~abort_now
             dirty = dirty | (receivers[:, None] & union[None, :])
             dirty = dirty & ~(commit_now | abort_now)[:, None]
-        ps = P.commit_many(ps, commit_now)
-        ps = P.abort_many(ps, abort_now)
-        return P.begin_many(ps, begin_m), dirty
+        if cfg.protocol == "ppcc":
+            ps = P.commit_many(ps, commit_now)
+            ps = P.abort_many(ps, abort_now)
+            return P.begin_many(ps, begin_m), dirty
+        # 2pl / occ never write prec, class bits or locks — leave/begin
+        # reduce to the read/write-set and active-bit updates
+        gone = commit_now | abort_now
+        keep = ~(gone | begin_m)[:, None]
+        return ps._replace(
+            read_set=ps.read_set & keep,
+            write_set=ps.write_set & keep,
+            active=(ps.active & ~gone) | begin_m,
+        ), dirty
 
-    ps5, dirty = jax.lax.cond(
-        (commit_now | abort_now | begin_m).any(),
-        leave_and_begin, lambda ps: (ps, s.dirty), ps2)
+    if cfg.fleet:
+        ps5, dirty = leave_and_begin(ps2)
+    else:
+        ps5, dirty = jax.lax.cond(
+            (commit_now | abort_now | begin_m).any(),
+            leave_and_begin, lambda ps: (ps, s.dirty), ps2)
 
     # fresh workloads are only needed on commit iterations — gate the
     # (vmapped) sampling behind a cond so quiet iterations skip it
@@ -720,8 +765,22 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
         return (jnp.full((n, cfg.max_ops), -1, jnp.int8),
                 jnp.zeros((n, cfg.max_ops), jnp.int32))
 
-    fresh_kinds, fresh_items = jax.lax.cond(commit_now.any(), do_sample,
-                                            no_sample, kt)
+    pool_next = s.pool_next
+    if cfg.pool:
+        # pop pool rows instead of sampling in-loop: the c-th committing
+        # slot (slot order) takes pool[(pool_next + c) mod P].  Same
+        # workload distribution, drawn once at init; the pool rides the
+        # carry untouched, so XLA hoists it as loop-invariant.
+        rank = jnp.cumsum(commit_now) - 1
+        take = (pool_next + jnp.where(commit_now, rank, 0)) % cfg.pool
+        fresh_kinds = s.pool_kinds[take]
+        fresh_items = s.pool_items[take]
+        pool_next = (pool_next + commit_now.sum()) % cfg.pool
+    elif cfg.fleet:
+        fresh_kinds, fresh_items = do_sample(kt)
+    else:
+        fresh_kinds, fresh_items = jax.lax.cond(commit_now.any(), do_sample,
+                                                no_sample, kt)
     new_kinds = jnp.where(commit_now[:, None], fresh_kinds, s.kinds)
     new_items = jnp.where(commit_now[:, None], fresh_items, s.items)
 
@@ -808,7 +867,8 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
         commits=s.commits + commit_now.sum(),
         aborts=s.aborts + abort_now.sum(),
         blocks=s.blocks + new_blocks,
-        ops_done=s.ops_done + proceed.sum())
+        ops_done=s.ops_done + proceed.sum(),
+        pool_next=pool_next)
 
 
 def default_cohort_dt(p: SimParams) -> float:
@@ -833,19 +893,71 @@ def make_engine(p: SimParams, protocol: str, max_iters: int = 400_000,
     return run
 
 
+def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
+                       max_iters: int = 400_000, step_mode: str = "cohort",
+                       cohort_dt: float = None, fleet: bool = False,
+                       pool: int = 0):
+    """An engine whose MPL is a RUNTIME parameter (DESIGN.md §2.4).
+
+    The slot axis is padded to the static bucket ``n_slots``; the
+    returned ``run(seed, mpl)`` activates only the first ``mpl`` lanes
+    (``mpl`` is a traced int32, so one compiled executable serves every
+    MPL point up to the bucket).  Padded slots start inactive with
+    ``next_time = INF`` and are never begun, so every masked primitive
+    leaves them inert.
+    """
+    init, cond, step = engine_parts(p, protocol, max_iters=max_iters,
+                                    step_mode=step_mode,
+                                    cohort_dt=cohort_dt, n_slots=n_slots,
+                                    fleet=fleet, pool=pool)
+
+    @jax.jit
+    def _run(seed: jax.Array, mpl: jax.Array) -> EngState:
+        return jax.lax.while_loop(cond, step, init(seed, mpl))
+
+    def run(seed, mpl) -> EngState:
+        # only the first n_slots lanes exist — a larger mpl would be
+        # silently clamped by init's fori_loop, mislabeling the result
+        if not isinstance(mpl, jax.core.Tracer) and int(mpl) > n_slots:
+            raise ValueError(f"mpl={int(mpl)} > n_slots={n_slots}")
+        return _run(seed, mpl)
+
+    run._cache_size = _run._cache_size
+    return run
+
+
 def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
-                 step_mode: str = "cohort", cohort_dt: float = None):
+                 step_mode: str = "cohort", cohort_dt: float = None,
+                 n_slots: int = None, fleet: bool = False, pool: int = 0):
     """(init, cond, step) for single-stepping an engine from tests —
-    e.g. checking protocol invariants after every cohort step."""
+    e.g. checking protocol invariants after every cohort step.
+
+    ``n_slots`` pads the slot axis beyond ``p.mpl`` (the padded-lane
+    engine); ``init(seed, mpl=None)`` then takes the number of active
+    slots as a runtime value (default ``p.mpl``)."""
     if step_mode not in ("cohort", "event"):
         raise ValueError(f"unknown step_mode: {step_mode!r}")
     if cohort_dt is None:
         cohort_dt = default_cohort_dt(p)
+    if n_slots is None:
+        n_slots = p.mpl
+    if n_slots < p.mpl:
+        raise ValueError(f"n_slots={n_slots} < mpl={p.mpl}")
     cfg = dataclasses.replace(_cfg(p, max_iters), protocol=protocol,
-                              cohort_dt=float(cohort_dt))
+                              cohort_dt=float(cohort_dt), n=n_slots,
+                              fleet=fleet, pool=pool)
 
-    def init(seed) -> EngState:
+    def init(seed, mpl=None) -> EngState:
+        if mpl is None:
+            mpl = p.mpl
+        mpl = jnp.asarray(mpl, jnp.int32)
         key = jax.random.PRNGKey(seed)
+        if cfg.pool:
+            key, kp = jax.random.split(key)
+            pool_kinds, pool_items = sample_txns(kp, cfg, cfg.pool)
+        else:
+            pool_kinds = jnp.zeros((0, cfg.max_ops), jnp.int8)
+            pool_items = jnp.zeros((0, cfg.max_ops), jnp.int32)
         s = EngState(
             now=jnp.float32(0.0), key=key,
             pstate=P.init_state(cfg.n, cfg.d),
@@ -862,10 +974,17 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
             disk_free=jnp.zeros(cfg.disks, jnp.float32),
             commits=jnp.int32(0), aborts=jnp.int32(0),
             blocks=jnp.int32(0), ops_done=jnp.int32(0),
-            iters=jnp.int32(0))
+            iters=jnp.int32(0),
+            pool_kinds=pool_kinds, pool_items=pool_items,
+            pool_next=jnp.int32(0))
+        # begin only the first `mpl` slots; the rest stay PH_OFF/INF so
+        # every cohort mask derived from `ready` leaves them inert
         return jax.lax.fori_loop(
             0, cfg.n,
-            lambda i, s_: _begin_txn(cfg, s_, i, jnp.bool_(True)), s)
+            lambda i, s_: jax.lax.cond(
+                i < mpl,
+                lambda s2: _begin_txn(cfg, s2, i, jnp.bool_(True)),
+                lambda s2: s2, s_), s)
 
     def cond(s: EngState):
         return (s.now <= cfg.horizon) & (s.iters < cfg.max_iters) & \

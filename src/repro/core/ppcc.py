@@ -280,8 +280,10 @@ def _any_overlap(a: jax.Array, b: jax.Array) -> jax.Array:
     """bool[N, M] x bool[K, M] -> bool[N, K] row-pair intersection via
     packed bitsets — the jnp twin of the Pallas conflict kernel, right
     for the engine's small N (the scheduler's thousands-of-txns case
-    goes through ``kernels.conflict`` instead)."""
-    ap, bp = _pack_bits(a), _pack_bits(b)
+    goes through ``kernels.conflict`` instead).  Self-joins (the hot
+    engine case) pack the operand once."""
+    ap = _pack_bits(a)
+    bp = ap if b is a else _pack_bits(b)
     return ((ap[:, None, :] & bp[None, :, :]) != 0).any(-1)
 
 
@@ -449,9 +451,18 @@ def wc_acquire_many(s: PPCCState, mask: jax.Array, exact: bool = True
     (no partial locks).  Returns (state, got bool[n]).
     """
     n = s.n
+    d = s.d
     idx = jnp.arange(n, dtype=jnp.int32)
-    free = (s.locks[None, :] < 0) | (s.locks[None, :] == idx[:, None])
-    feasible = mask & jnp.where(s.write_set, free, True).all(axis=1)
+    # feasible[i] <=> every locked item of i's write set is locked BY i.
+    # Counting form of `where(ws, locks<0 | locks==i, True).all(1)`:
+    # one [n, d] bool pass instead of two [n, d] int32 compares.
+    locked = s.locks >= 0                                     # [d]
+    row = jnp.maximum(s.locks, 0)
+    owner_covers = s.write_set[row, jnp.arange(d)] & locked   # [d]
+    mine = jnp.zeros(n, jnp.int32).at[row].add(
+        owner_covers.astype(jnp.int32))
+    want = (s.write_set & locked[None, :]).sum(axis=1)
+    feasible = mask & (want == mine)
     overlap = _any_overlap(s.write_set, s.write_set) & \
         ~jnp.eye(n, dtype=bool)
 
@@ -498,17 +509,37 @@ def abort_many(s: PPCCState, mask: jax.Array) -> PPCCState:
     return _leave_many(s, mask)
 
 
+def default_admit_block(n: int) -> int:
+    """Block size for ``admit_ops_blocked``: the fast path only fires
+    when a block has no same-slot pair, and over ``n`` slots a random
+    block of B ops collides with probability ~ B²/2n (birthday), so B
+    must track sqrt(n).  B = sqrt(n)/2 keeps the collision rate ≈ 12%
+    — measured optimum on the ``sched_admit`` shape (DESIGN.md §4);
+    the old fixed B=32 at n=256 collided in ~90% of blocks and ran
+    *slower* than the plain scan."""
+    b = 1
+    while (2 * b) ** 2 <= n // 4:   # largest power of two <= sqrt(n)/2
+        b *= 2
+    return max(8, b)
+
+
 def admit_ops_blocked(s: PPCCState, txn: jax.Array, item: jax.Array,
                       is_write: jax.Array, valid: jax.Array,
-                      block: int = 32) -> BatchVerdict:
+                      block: int = None) -> BatchVerdict:
     """Exactly ``admit_ops``, but blocked: the op list is cut into blocks
     of ``block`` consecutive ops; a block whose (valid) ops are pairwise
     independent — disjoint parties, distinct txn slots, no same-item
     write pair — resolves in ONE vectorized ``try_ops_batched`` step,
     otherwise it falls back to the sequential inner scan.  Either branch
     is order-exact, so the result is bit-identical to ``admit_ops``.
+
+    ``block=None`` picks ``default_admit_block(n)`` — block size must
+    scale with sqrt(n) or same-slot birthday collisions push every
+    block onto the sequential fallback (DESIGN.md §4).
     """
     n = s.n
+    if block is None:
+        block = default_admit_block(n)
     m = txn.shape[0]
     pad = (-m) % block
     if pad:

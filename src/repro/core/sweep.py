@@ -1,0 +1,160 @@
+"""Padded-lane fleet sweeps: one compiled executable for a paper grid.
+
+The figure harness needs the full (protocol × MPL × seed) grid of
+Table 1 (DESIGN.md §2.4).  Run per point, every point pays a fresh
+trace + XLA compile because the slot count is baked into the trace
+shape.  Here the slot axis is padded to a static bucket
+(``slot_bucket``) and MPL becomes a *runtime* int32, so
+
+* one ``jax.jit`` call compiles the whole grid exactly once
+  (``Fleet.traces`` counts retraces — new MPL values or seeds of the
+  same grid shape reuse the executable), and
+* the (MPL × seed) lanes of each protocol ``vmap`` into one SPMD
+  computation whose ``lax.while_loop`` runs while ANY lane is active
+  (the batching rule freezes finished lanes via select).
+
+Protocol selection is a trace-time branch in the engine
+(``EngCfg.protocol``), so the fleet stacks one vmapped sub-sweep per
+protocol inside the single jitted call — still one executable, without
+paying the run-all-protocols select a traced ``lax.switch`` would cost
+under vmap.  Lane bodies use ``fleet=True`` engines: the
+quiet-iteration ``lax.cond`` gates of the cohort body are dropped
+because under vmap they decay into computing both branches plus a
+full-state select.
+
+Multi-device hosts shard the lane axis over the standard
+``("data", "model")`` mesh (``repro.parallel.sharding.host_mesh``) via
+``shard_map``: every device then runs its lane shard's while_loop
+independently — lanes on different devices are not even in lockstep.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import jaxsim
+from .types import SimParams, paper_figure_params
+
+PROTOCOLS = ("ppcc", "2pl", "occ")
+METRICS = ("commits", "aborts", "blocks", "ops_done", "iters")
+
+
+def slot_bucket(max_mpl: int, quantum: int = 32) -> int:
+    """Pad the slot axis to a multiple of ``quantum`` so nearby grids
+    (e.g. adding MPL=120 to the paper grid) hit the same executable."""
+    return max(quantum, quantum * math.ceil(max_mpl / quantum))
+
+
+def fleet_mesh(n_lanes: int):
+    """Largest ``host_mesh`` whose data axis divides ``n_lanes``
+    (shard_map needs an even lane split); None on single-device hosts."""
+    from ..parallel.sharding import host_mesh
+    mesh = host_mesh()
+    if mesh is None:
+        return None
+    nd = mesh.shape["data"]
+    while nd > 1 and n_lanes % nd:
+        nd -= 1
+    return host_mesh(nd) if nd > 1 else None
+
+
+class Fleet:
+    """One compiled executable for a (protocol × MPL × seed) grid.
+
+    ``fleet(mpls, seeds)`` runs every lane of the grid and returns
+    ``{protocol: {metric: int array[M, S]}}`` plus per-lane ``now``.
+    MPL and seed are runtime values: any grid of the same (M, S) shape
+    with ``max(mpls) <= n_slots`` reuses the executable (``traces``
+    stays at 1).
+    """
+
+    def __init__(self, p: SimParams, protocols: Sequence[str] = PROTOCOLS,
+                 n_slots: Optional[int] = None, max_iters: int = 400_000,
+                 cohort_dt: Optional[float] = None, mesh=None,
+                 pool: Optional[int] = None):
+        if n_slots is None:
+            n_slots = slot_bucket(p.mpl)
+        if pool is None:
+            # per-lane commits are bounded well under horizon/6 across
+            # the paper grid (figs 13/15 peak ~6.8k per 100k horizon);
+            # a wrapped pool would replay early-run workload, so size
+            # it past the bound instead
+            pool = max(4096, int(p.horizon) // 6)
+        self.params = p
+        self.protocols = tuple(protocols)
+        self.n_slots = n_slots
+        self.mesh = mesh
+        self.traces = 0
+        parts = {
+            proto: jaxsim.engine_parts(
+                p, proto, max_iters=max_iters, cohort_dt=cohort_dt,
+                n_slots=n_slots, fleet=True, pool=pool)
+            for proto in self.protocols
+        }
+
+        def lane_runner(proto: str):
+            init, cond, step = parts[proto]
+
+            def run_one(seed, mpl):
+                return jax.lax.while_loop(cond, step, init(seed, mpl))
+
+            runner = jax.vmap(run_one)
+            if mesh is not None:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+                runner = shard_map(
+                    runner, mesh=mesh, in_specs=(P("data"), P("data")),
+                    out_specs=P("data"), check_rep=False)
+            return runner
+
+        runners = {proto: lane_runner(proto) for proto in self.protocols}
+
+        def fleet_fn(mpls, seeds):
+            self.traces += 1          # python side effect: counts traces
+            m, s = mpls.shape[0], seeds.shape[0]
+            mpl_l = jnp.repeat(mpls, s)
+            seed_l = jnp.tile(seeds, m)
+            out = {}
+            for proto in self.protocols:
+                fin = runners[proto](seed_l, mpl_l)
+                res = {k: getattr(fin, k).reshape(m, s) for k in METRICS}
+                res["now"] = fin.now.reshape(m, s)
+                out[proto] = res
+            return out
+
+        self._jit = jax.jit(fleet_fn)
+
+    def __call__(self, mpls, seeds):
+        mpls = jnp.asarray(mpls, jnp.int32)
+        seeds = jnp.asarray(seeds, jnp.int32)
+        if int(mpls.max()) > self.n_slots:
+            raise ValueError(
+                f"max(mpls)={int(mpls.max())} exceeds n_slots={self.n_slots}")
+        return self._jit(mpls, seeds)
+
+
+def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
+              horizon: float, protocols: Sequence[str] = PROTOCOLS,
+              n_slots: Optional[int] = None, max_iters: int = 400_000,
+              shard: bool = True,
+              ) -> Tuple[Dict[str, Dict[str, np.ndarray]], Fleet]:
+    """Run one paper figure's full grid as a single compiled call.
+
+    Returns ``({protocol: {metric: np.ndarray[M, S]}}, fleet)``; reuse
+    the returned ``Fleet`` to re-run the same figure shape (different
+    MPLs/seeds/horizons of the same grid shape) with zero recompiles.
+    """
+    p = paper_figure_params(fig).with_(horizon=horizon)
+    if n_slots is None:
+        n_slots = slot_bucket(max(mpl_grid))
+    n_lanes = len(mpl_grid) * len(seeds)
+    mesh = fleet_mesh(n_lanes) if shard else None
+    fleet = Fleet(p, protocols=protocols, n_slots=n_slots,
+                  max_iters=max_iters, mesh=mesh)
+    out = fleet(list(mpl_grid), list(seeds))
+    host = jax.tree.map(np.asarray, out)
+    return host, fleet

@@ -128,7 +128,8 @@ def _project_qkv(p: Params, cfg: ModelConfig, x: jax.Array,
 def _pin(x: jax.Array, axes) -> jax.Array:
     """with_sharding_constraint that no-ops without an ambient mesh and
     drops axes that do not divide (smoke tests, odd shapes)."""
-    am = jax.sharding.get_abstract_mesh()
+    from ..parallel.sharding import get_abstract_mesh
+    am = get_abstract_mesh()
     if am is None or "model" not in getattr(am, "axis_names", ()):
         return x
     sizes = dict(zip(am.axis_names, am.axis_sizes))
@@ -150,7 +151,8 @@ def _pin(x: jax.Array, axes) -> jax.Array:
 
 
 def _dax():
-    am = jax.sharding.get_abstract_mesh()
+    from ..parallel.sharding import get_abstract_mesh
+    am = get_abstract_mesh()
     names = getattr(am, "axis_names", ()) if am is not None else ()
     return tuple(a for a in ("pod", "data") if a in names) or None
 

@@ -31,8 +31,47 @@ from ..models.config import ModelConfig, ShapeSpec
 MODEL_AXIS = "model"
 
 
+def get_abstract_mesh():
+    """Version-compat shim for ``jax.sharding.get_abstract_mesh``.
+
+    jax >= 0.5 exposes the ambient (context) mesh as an ``AbstractMesh``
+    via ``jax.sharding.get_abstract_mesh``; on 0.4.x the same information
+    lives in the thread-local physical mesh set by ``with mesh:``.
+    Returns an object with ``axis_names`` / ``axis_sizes`` (an
+    ``AbstractMesh`` when available, else the physical ``Mesh``), or
+    ``None`` when no mesh is ambient.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        am = get()
+        if am is None or not getattr(am, "axis_names", ()):
+            return None
+        return am
+    try:
+        from jax._src.mesh import thread_resources
+        pm = thread_resources.env.physical_mesh
+    except Exception:           # pragma: no cover - internal API moved
+        return None
+    if pm is None or pm.empty:
+        return None
+    return getattr(pm, "abstract_mesh", pm)
+
+
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def host_mesh(n_data: Optional[int] = None) -> Optional[Mesh]:
+    """The standard ``("data", "model")`` mesh over the host's devices,
+    with everything on the data axis — the shape fleet sweeps shard
+    lanes over (DESIGN.md §2.4).  ``n_data`` caps the data-axis size;
+    returns None when only one device is available (callers fall back
+    to an unsharded vmap)."""
+    devs = jax.devices()
+    nd = len(devs) if n_data is None else min(n_data, len(devs))
+    if nd <= 1:
+        return None
+    return Mesh(np.asarray(devs[:nd]).reshape(nd, 1), ("data", MODEL_AXIS))
 
 
 def _axis_size(mesh: Mesh, axes) -> int:
@@ -260,7 +299,7 @@ def constrain_act(x: jax.Array, *, last_model: bool = False) -> jax.Array:
     """Pin an activation's canonical layout: batch over (pod, data),
     optionally the trailing feature dim over model.  No-ops when there is
     no ambient mesh (smoke tests) or when a dim does not divide."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or not am.axis_names or MODEL_AXIS not in am.axis_names:
         return x
     sizes = dict(zip(am.axis_names, am.axis_sizes))
