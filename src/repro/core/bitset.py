@@ -1,0 +1,145 @@
+"""Packed uint32 bitsets — the protocol-wide set representation.
+
+The PPCC protocol is defined entirely by set-membership tests (reader/
+writer overlap at an item, precedence-respecting admission, write-commit
+lock coverage), and the ``read_set`` / ``write_set`` / ``dirty`` arrays
+are the dominant memory traffic of every fleet body.  This module is the
+single packed representation those sets share end to end: item ``x``
+lives in word ``x >> 5`` at bit ``x & 31`` of a ``uint32[..., W]`` row,
+``W = ceil(d / 32)``.  The item axis pads up to a multiple of 32; pad
+bits are *invariantly zero* (rows are cleared whole, and per-item writes
+only ever target ``x < d``), so word-wise AND/OR/popcount over full rows
+is exact — no masking of the tail word anywhere.
+
+Consumers:
+
+* ``repro.core.ppcc``   — every protocol primitive works on packed rows,
+* ``repro.core.jaxsim`` — engine state init and the OCC ``dirty`` map,
+* ``repro.kernels.conflict`` — the Pallas conflict kernels take these
+  words directly (``pack_bitsets`` is this module's ``pack``),
+* ``repro.sched.scheduler`` — batch ticks accept pre-packed sets.
+
+DESIGN.md §1.1 documents the layout and the padded-lane story.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+_U1 = jnp.uint32(1)
+
+
+def n_words(d: int) -> int:
+    """Words per row for a d-item universe."""
+    return -(-d // WORD)
+
+
+def zeros(n: int, d: int) -> jax.Array:
+    """Empty packed set rows: uint32[n, n_words(d)]."""
+    return jnp.zeros((n, n_words(d)), jnp.uint32)
+
+
+def word_bit(item: jax.Array):
+    """(word index, bit shift) of an item index; shapes follow ``item``."""
+    return item >> 5, (item & 31).astype(jnp.uint32)
+
+
+def pack(sets: jax.Array) -> jax.Array:
+    """bool[..., d] -> uint32[..., ceil(d/32)]."""
+    d = sets.shape[-1]
+    pad = (-d) % WORD
+    if pad:
+        sets = jnp.pad(sets, [(0, 0)] * (sets.ndim - 1) + [(0, pad)])
+    x = sets.reshape(*sets.shape[:-1], -1, WORD).astype(jnp.uint32)
+    weights = _U1 << jnp.arange(WORD, dtype=jnp.uint32)
+    return (x * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack(bits: jax.Array, d: int) -> jax.Array:
+    """uint32[..., W] -> bool[..., d] (drops the pad bits)."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    x = (bits[..., None] >> shifts) & _U1
+    return x.reshape(*bits.shape[:-1], bits.shape[-1] * WORD)[
+        ..., :d].astype(bool)
+
+
+def get(bits: jax.Array, row: jax.Array, item: jax.Array) -> jax.Array:
+    """Membership bit(s) ``bits[row, item]`` — row/item broadcast."""
+    w, b = word_bit(item)
+    return ((bits[row, w] >> b) & _U1).astype(bool)
+
+
+def get_col(bits: jax.Array, item: jax.Array) -> jax.Array:
+    """bool[n]: membership of (scalar) ``item`` across all rows."""
+    w, b = word_bit(item)
+    return ((bits[:, w] >> b) & _U1).astype(bool)
+
+
+def item_cols(bits: jax.Array, items: jax.Array) -> jax.Array:
+    """bool[m, n] gather: out[i, k] = bits[k, items[i]].
+
+    The batched-primitive op table — one uint32 word gather per (op,
+    slot) pair instead of a column slice of a bool[n, d] array.
+    """
+    w, b = word_bit(items)
+    return ((bits[:, w] >> b[None, :]) & _U1).astype(bool).T
+
+
+def set_bit(bits: jax.Array, row: jax.Array, item: jax.Array,
+            on: jax.Array) -> jax.Array:
+    """OR ``on`` into ``bits[row, item]`` (scalar row/item)."""
+    w, b = word_bit(item)
+    return bits.at[row, w].set(bits[row, w] | (on.astype(jnp.uint32) << b))
+
+
+def or_rowwise(bits: jax.Array, items: jax.Array, on: jax.Array
+               ) -> jax.Array:
+    """Per-row scatter: bits[i, items[i]] |= on[i] for every row i."""
+    rows = jnp.arange(bits.shape[0])
+    w, b = word_bit(items)
+    return bits.at[rows, w].set(bits[rows, w]
+                                | (on.astype(jnp.uint32) << b))
+
+
+def clear_rows(bits: jax.Array, mask: jax.Array) -> jax.Array:
+    """Zero every masked row (bool[n] mask)."""
+    return jnp.where(mask[:, None], jnp.uint32(0), bits)
+
+
+def any_overlap(a: jax.Array, b: jax.Array) -> jax.Array:
+    """uint32[N, W] x uint32[K, W] -> bool[N, K] row-pair intersection —
+    the jnp twin of the Pallas conflict kernel, right for small N (the
+    scheduler's thousands-of-txns case goes through
+    ``repro.kernels.conflict``)."""
+    return ((a[:, None, :] & b[None, :, :]) != 0).any(-1)
+
+
+def overlap_rows(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Row-wise intersection test: bool[...] = any(a[r] & b[r])."""
+    return ((a & b) != 0).any(-1)
+
+
+def any_bit(bits: jax.Array) -> jax.Array:
+    """bool[...]: row is non-empty."""
+    return (bits != 0).any(-1)
+
+
+def popcount(bits: jax.Array) -> jax.Array:
+    """int32[...]: set-bit count per row (SWAR per word, summed)."""
+    v = bits
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32).sum(-1)
+
+
+def or_reduce(bits: jax.Array, axis: int = 0) -> jax.Array:
+    """Bitwise-OR reduction (e.g. union of committed write sets)."""
+    return jax.lax.reduce(bits, jnp.uint32(0), jax.lax.bitwise_or,
+                          (axis,))
+
+
+# compatibility name: this is the packer `kernels.conflict.pack_bitsets`
+# and `ppcc._pack_bits` used to duplicate.
+pack_bitsets = pack

@@ -30,6 +30,11 @@ All three protocols run on the same tensor state:
   (write sets of transactions that committed during the reader's
   lifetime), re-checked at flush end to close the K-R overlap window.
 
+All set state — the protocol read/write sets and the OCC ``dirty``
+map — is packed ``uint32[n, ceil(d/32)]`` bitset words
+(``repro.core.bitset``, DESIGN.md §1.1); set algebra in the engine body
+is word-wise AND/OR/popcount.
+
 ``vmap`` over (seed, write_prob, mpl, block_timeout) turns a parameter
 sweep into one SPMD computation; ``examples/ppcc_sweep.py`` shards such
 a sweep over the production mesh's data axis.
@@ -57,6 +62,7 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import bitset as B
 from . import ppcc as P
 from .types import SimParams, SimResult
 
@@ -73,7 +79,7 @@ class EngState(NamedTuple):
     now: jax.Array               # f32 scalar
     key: jax.Array               # PRNG
     pstate: P.PPCCState          # protocol tensor state
-    dirty: jax.Array             # bool[N, D]   (OCC validation bitmap)
+    dirty: jax.Array             # uint32[N, W] (OCC validation bitmap)
     kinds: jax.Array             # int8[N, L]  op kinds (-1 pad)
     items: jax.Array             # int32[N, L]
     op_idx: jax.Array            # int32[N]
@@ -256,17 +262,17 @@ def _try_op(cfg: EngCfg, s: EngState, i, x, is_write
         return s._replace(pstate=ps2), verdict
     if cfg.protocol == "2pl":
         others = ps.active & (jnp.arange(cfg.n) != i)
-        x_held = (ps.write_set[:, x] & others).any()
-        s_held = (ps.read_set[:, x] & others).any()
+        x_held = (B.get_col(ps.write_set, x) & others).any()
+        s_held = (B.get_col(ps.read_set, x) & others).any()
         ok = jnp.where(is_write, ~x_held & ~s_held, ~x_held)
-        rs = ps.read_set.at[i, x].set(ps.read_set[i, x] | (ok & ~is_write))
-        ws = ps.write_set.at[i, x].set(ps.write_set[i, x] | (ok & is_write))
+        rs = B.set_bit(ps.read_set, i, x, ok & ~is_write)
+        ws = B.set_bit(ps.write_set, i, x, ok & is_write)
         verdict = jnp.where(ok, P.PROCEED, P.BLOCK)
         return s._replace(pstate=ps._replace(read_set=rs, write_set=ws)), \
             verdict
     # occ: never blocks
-    rs = ps.read_set.at[i, x].set(ps.read_set[i, x] | ~is_write)
-    ws = ps.write_set.at[i, x].set(ps.write_set[i, x] | is_write)
+    rs = B.set_bit(ps.read_set, i, x, ~is_write)
+    ws = B.set_bit(ps.write_set, i, x, is_write)
     return s._replace(pstate=ps._replace(read_set=rs, write_set=ws)), \
         jnp.int32(P.PROCEED)
 
@@ -282,7 +288,7 @@ def _read_done(cfg: EngCfg, s: EngState, i) -> Tuple[EngState, jax.Array]:
         return s._replace(pstate=ps3), code
     if cfg.protocol == "2pl":
         return s, jnp.int32(0)
-    fail = (ps.read_set[i] & s.dirty[i]).any()
+    fail = B.overlap_rows(ps.read_set[i], s.dirty[i])
     return s, jnp.where(fail, 3, 0)
 
 
@@ -291,14 +297,15 @@ def _on_commit(cfg: EngCfg, s: EngState, i) -> EngState:
     if cfg.protocol == "occ":
         # broadcast write set into every active transaction's dirty map
         others = ps.active & (jnp.arange(cfg.n) != i)
-        dirty = s.dirty | (others[:, None] & ps.write_set[i][None, :])
-        dirty = dirty.at[i].set(False)
+        dirty = jnp.where(others[:, None],
+                          s.dirty | ps.write_set[i][None, :], s.dirty)
+        dirty = dirty.at[i].set(jnp.uint32(0))
         s = s._replace(dirty=dirty)
     return s._replace(pstate=P.commit(ps, i))
 
 
 def _on_abort(cfg: EngCfg, s: EngState, i) -> EngState:
-    s = s._replace(dirty=s.dirty.at[i].set(False))
+    s = s._replace(dirty=s.dirty.at[i].set(jnp.uint32(0)))
     return s._replace(pstate=P.abort(s.pstate, i))
 
 
@@ -407,7 +414,7 @@ def _ev_attempt(cfg: EngCfg, s: EngState, i) -> EngState:
         s2, code = _read_done(cfg, s, i)
 
         def flush(s3: EngState) -> EngState:
-            n_w = s3.pstate.write_set[i].sum().astype(jnp.int32)
+            n_w = B.popcount(s3.pstate.write_set[i])
             s3 = s3._replace(flush_left=s3.flush_left.at[i].set(n_w),
                              phase=s3.phase.at[i].set(PH_FLUSH))
             return jax.lax.cond(n_w > 0, _flush_one,
@@ -485,7 +492,7 @@ def _ev_flush_done(cfg: EngCfg, s: EngState, i) -> EngState:
 def _commit(cfg: EngCfg, s: EngState, i) -> EngState:
     if cfg.protocol == "occ":
         # close the Kung-Robinson overlap window: re-validate at commit
-        fail = (s.pstate.read_set[i] & s.dirty[i]).any()
+        fail = B.overlap_rows(s.pstate.read_set[i], s.dirty[i])
 
         def ok(s2):
             return _commit_body(cfg, s2, i)
@@ -578,19 +585,19 @@ def _try_ops_cohort(cfg: EngCfg, ps: P.PPCCState, item: jax.Array,
         lower = idx[None, :] < idx[:, None]
         sel = ready & ~(same & ready[None, :] & lower).any(axis=1)
         others = ps.active[None, :] & ~eye
-        x_held = (ps.write_set[:, item].T & others).any(axis=1)
-        s_held = (ps.read_set[:, item].T & others).any(axis=1)
+        x_held = (B.item_cols(ps.write_set, item) & others).any(axis=1)
+        s_held = (B.item_cols(ps.read_set, item) & others).any(axis=1)
         ok = jnp.where(is_write, ~x_held & ~s_held, ~x_held) & sel
         ps2 = ps._replace(
-            read_set=ps.read_set.at[idx, item].max(ok & ~is_write),
-            write_set=ps.write_set.at[idx, item].max(ok & is_write))
+            read_set=B.or_rowwise(ps.read_set, item, ok & ~is_write),
+            write_set=B.or_rowwise(ps.write_set, item, ok & is_write))
         verdict = jnp.where(ok, P.PROCEED, P.BLOCK).astype(jnp.int32)
         return ps2, verdict, sel
     # occ: ops never read other slots' protocol state — all independent
     sel = ready
     ps2 = ps._replace(
-        read_set=ps.read_set.at[idx, item].max(sel & ~is_write),
-        write_set=ps.write_set.at[idx, item].max(sel & is_write))
+        read_set=B.or_rowwise(ps.read_set, item, sel & ~is_write),
+        write_set=B.or_rowwise(ps.write_set, item, sel & is_write))
     verdict = jnp.full(n, P.PROCEED, jnp.int32)
     return ps2, verdict, sel
 
@@ -610,7 +617,7 @@ def _wc_cohort(cfg: EngCfg, ps: P.PPCCState, dirty: jax.Array,
         return ps2, flush_m, wait_lock_m, wait_prec_m, zeros
     if cfg.protocol == "2pl":
         return ps, wc_m, zeros, zeros, zeros
-    fail = (ps.read_set & dirty).any(axis=1)
+    fail = B.overlap_rows(ps.read_set, dirty)
     return ps, wc_m & ~fail, zeros, zeros, wc_m & fail
 
 
@@ -685,7 +692,7 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
             lambda ps: (ps, jnp.zeros(n, bool), jnp.zeros(n, bool),
                         jnp.zeros(n, bool), jnp.zeros(n, bool)),
             ps1)
-    n_w = ps2.write_set.sum(axis=1).astype(jnp.int32)
+    n_w = B.popcount(ps2.write_set)
     flush_io = flush_m & (n_w > 0)
     flush_zero = flush_m & (n_w == 0)
 
@@ -706,11 +713,12 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
         def occ_validate_multi(_):
             def vstep(acc, i):
                 fail_i = commit_pre[i] & \
-                    (ps2.read_set[i] & (s.dirty[i] | acc)).any()
+                    B.overlap_rows(ps2.read_set[i], s.dirty[i] | acc)
                 acc = acc | jnp.where(commit_pre[i] & ~fail_i,
-                                      ps2.write_set[i], False)
+                                      ps2.write_set[i], jnp.uint32(0))
                 return acc, fail_i
-            _, fails = jax.lax.scan(vstep, jnp.zeros(cfg.d, bool), idx)
+            _, fails = jax.lax.scan(
+                vstep, jnp.zeros(ps2.words, jnp.uint32), idx)
             return fails
 
         if cfg.fleet:
@@ -718,7 +726,8 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
         else:
             occ_fail = jax.lax.cond(
                 commit_pre.sum() > 1, occ_validate_multi,
-                lambda _: commit_pre & (ps2.read_set & s.dirty).any(axis=1),
+                lambda _: commit_pre & B.overlap_rows(ps2.read_set,
+                                                      s.dirty),
                 None)
     else:
         occ_fail = jnp.zeros(n, bool)
@@ -731,10 +740,13 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
     def leave_and_begin(ps):
         dirty = s.dirty
         if cfg.protocol == "occ":
-            union = (commit_now[:, None] & ps.write_set).any(axis=0)
+            union = B.or_reduce(
+                jnp.where(commit_now[:, None], ps.write_set,
+                          jnp.uint32(0)), axis=0)
             receivers = ps.active & ~commit_now & ~abort_now
-            dirty = dirty | (receivers[:, None] & union[None, :])
-            dirty = dirty & ~(commit_now | abort_now)[:, None]
+            dirty = jnp.where(receivers[:, None],
+                              dirty | union[None, :], dirty)
+            dirty = B.clear_rows(dirty, commit_now | abort_now)
         if cfg.protocol == "ppcc":
             ps = P.commit_many(ps, commit_now)
             ps = P.abort_many(ps, abort_now)
@@ -742,10 +754,9 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
         # 2pl / occ never write prec, class bits or locks — leave/begin
         # reduce to the read/write-set and active-bit updates
         gone = commit_now | abort_now
-        keep = ~(gone | begin_m)[:, None]
         return ps._replace(
-            read_set=ps.read_set & keep,
-            write_set=ps.write_set & keep,
+            read_set=B.clear_rows(ps.read_set, gone | begin_m),
+            write_set=B.clear_rows(ps.write_set, gone | begin_m),
             active=(ps.active & ~gone) | begin_m,
         ), dirty
 
@@ -961,7 +972,7 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
         s = EngState(
             now=jnp.float32(0.0), key=key,
             pstate=P.init_state(cfg.n, cfg.d),
-            dirty=jnp.zeros((cfg.n, cfg.d), bool),
+            dirty=B.zeros(cfg.n, cfg.d),
             kinds=jnp.full((cfg.n, cfg.max_ops), -1, jnp.int8),
             items=jnp.zeros((cfg.n, cfg.max_ops), jnp.int32),
             op_idx=jnp.zeros(cfg.n, jnp.int32),

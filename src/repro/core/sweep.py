@@ -22,6 +22,11 @@ quiet-iteration ``lax.cond`` gates of the cohort body are dropped
 because under vmap they decay into computing both branches plus a
 full-state select.
 
+Lane bodies stream the packed ``uint32[n, ceil(d/32)]`` set words of
+``repro.core.bitset`` (DESIGN.md §1.1) — the fleet's dominant memory
+traffic is the set arrays, and packing cuts it ~8x at the paper's
+``db_size=500``.
+
 Multi-device hosts shard the lane axis over the standard
 ``("data", "model")`` mesh (``repro.parallel.sharding.host_mesh``) via
 ``shard_map``: every device then runs its lane shard's while_loop

@@ -21,6 +21,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# the protocol-wide packer lives in core.bitset; re-exported here so
+# kernel callers keep their historical import path
+from ..core.bitset import pack as pack_bitsets  # noqa: F401
+
 
 def _conflict_kernel(a_ref, b_ref, o_ref, *, words: int, chunk: int):
     acc = jnp.zeros(o_ref.shape, jnp.bool_)
@@ -128,14 +132,3 @@ def conflict_fused(read_bits: jax.Array, write_bits: jax.Array, *,
         ],
         interpret=interpret,
     )(read_bits, write_bits, write_bits)
-
-
-def pack_bitsets(sets: jax.Array) -> jax.Array:
-    """bool[N, D] -> uint32[N, ceil(D/32)] packed bitsets."""
-    n, d = sets.shape
-    pad = (-d) % 32
-    if pad:
-        sets = jnp.pad(sets, ((0, 0), (0, pad)))
-    x = sets.reshape(n, -1, 32).astype(jnp.uint32)
-    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-    return (x * weights).sum(axis=-1, dtype=jnp.uint32)

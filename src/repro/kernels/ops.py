@@ -48,6 +48,8 @@ def conflict_fused(read_bits, write_bits, *, block: int = 256):
         interpret=_interpret_default())
 
 
+# the protocol-wide packer (repro.core.bitset.pack), jitted; conflict
+# re-exports it so the historical kernels import path keeps working
 pack_bitsets = jax.jit(_conflict.pack_bitsets)
 
 

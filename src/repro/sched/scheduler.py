@@ -19,6 +19,11 @@ chosen policy, which may proceed this tick and in which commit order:
 The pairwise conflict matrices come from the packed-bitset Pallas
 kernel (``repro.kernels.conflict``); the O(n^2) pair scan is the
 scheduler hot spot at thousands of concurrent actors.
+
+Set inputs may be boolean ``bool[n, d]`` masks *or* already-packed
+``uint32[n, ceil(d/32)]`` words (``repro.core.bitset.pack``) — callers
+that keep packed state hand it straight to the kernel with no re-pack
+per tick.
 """
 from __future__ import annotations
 
@@ -28,8 +33,15 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import ppcc
+from ..core import bitset, ppcc
 from ..kernels import ops as kops
+
+
+def _as_bits(sets: jax.Array) -> jax.Array:
+    """Accept bool[n, d] or pre-packed uint32[n, W] set rows."""
+    if sets.dtype == jnp.uint32:
+        return sets
+    return bitset.pack(sets)
 
 
 class TickResult(NamedTuple):
@@ -80,9 +92,9 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
     low-conflict transactions claim their arcs first, which admits
     larger batches under contention at the cost of strict priority.
     """
-    n, d = read_sets.shape
-    rb = kops.pack_bitsets(read_sets)
-    wb = kops.pack_bitsets(write_sets)
+    n = read_sets.shape[0]
+    rb = _as_bits(read_sets)
+    wb = _as_bits(write_sets)
     raw, ww, raw_deg, ww_deg = _conflict_matrices(rb, wb, use_kernel)
     if order == "degree":
         # total involvement = RAW out-degree (kernel row popcounts)
@@ -136,9 +148,9 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
 def twopl_tick(read_sets: jax.Array, write_sets: jax.Array,
                valid: jax.Array, use_kernel: bool = True) -> TickResult:
     """Conservative baseline: admit a prefix-greedy conflict-free set."""
-    n, d = read_sets.shape
-    rb = kops.pack_bitsets(read_sets)
-    wb = kops.pack_bitsets(write_sets)
+    n = read_sets.shape[0]
+    rb = _as_bits(read_sets)
+    wb = _as_bits(write_sets)
     raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
     conflict = raw | raw.T | ww            # any lock conflict
     conflict = conflict & ~jnp.eye(n, dtype=bool)
@@ -160,9 +172,9 @@ def occ_tick(read_sets: jax.Array, write_sets: jax.Array,
     """Optimistic baseline: all run; backward validation in priority
     order — abort if an earlier-priority survivor wrote what you read
     (or wrote)."""
-    n, d = read_sets.shape
-    rb = kops.pack_bitsets(read_sets)
-    wb = kops.pack_bitsets(write_sets)
+    n = read_sets.shape[0]
+    rb = _as_bits(read_sets)
+    wb = _as_bits(write_sets)
     raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
     bad = raw | ww                          # i conflicts with j's writes
 

@@ -1,0 +1,130 @@
+"""`repro.core.bitset` — the packed uint32 set representation every
+protocol layer shares (DESIGN.md §1.1): round-trip, bit indexing,
+overlap/popcount vs the boolean reference, and statistical parity of a
+full fig7 lane (packed engine vs the boolean event-heap oracle) for all
+three protocols."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitset as B
+from repro.core import jaxsim, pysim
+from repro.core.types import paper_figure_params
+
+
+@pytest.mark.parametrize("n,d", [(8, 1), (5, 31), (64, 32), (16, 100),
+                                 (3, 500)])
+def test_pack_unpack_roundtrip(n, d):
+    rng = np.random.default_rng(d)
+    sets = rng.random((n, d)) < 0.3
+    packed = B.pack(jnp.array(sets))
+    assert packed.shape == (n, B.n_words(d))
+    assert packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(B.unpack(packed, d)), sets)
+
+
+def test_pack_pad_bits_are_zero():
+    """Pad bits (item indices >= d) must stay zero — word-wise AND/OR/
+    popcount over full rows relies on it."""
+    d = 50
+    sets = np.ones((4, d), bool)
+    packed = np.asarray(B.pack(jnp.array(sets)))
+    tail_mask = np.uint32((1 << (d % 32)) - 1)
+    assert (packed[:, -1] & ~tail_mask).max() == 0
+
+
+def test_get_set_or_rowwise_item_cols():
+    rng = np.random.default_rng(0)
+    n, d = 6, 70
+    sets = rng.random((n, d)) < 0.25
+    bits = B.pack(jnp.array(sets))
+    # get / get_col
+    for x in (0, 31, 32, 69):
+        np.testing.assert_array_equal(
+            np.asarray(B.get_col(bits, jnp.int32(x))), sets[:, x])
+        assert bool(B.get(bits, jnp.int32(2), jnp.int32(x))) == \
+            bool(sets[2, x])
+    # item_cols: out[i, k] = sets[k, items[i]]
+    items = jnp.array(rng.integers(0, d, 9), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(B.item_cols(bits, items)),
+        sets[:, np.asarray(items)].T)
+    # set_bit ORs (and a False `on` is a no-op)
+    b2 = B.set_bit(bits, jnp.int32(3), jnp.int32(33), jnp.bool_(True))
+    exp = sets.copy()
+    exp[3, 33] = True
+    np.testing.assert_array_equal(np.asarray(B.unpack(b2, d)), exp)
+    b3 = B.set_bit(bits, jnp.int32(3), jnp.int32(33), jnp.bool_(False))
+    np.testing.assert_array_equal(np.asarray(b3), np.asarray(bits))
+    # or_rowwise: bits[i, items[i]] |= on[i]
+    ritems = jnp.array(rng.integers(0, d, n), jnp.int32)
+    on = jnp.array(rng.random(n) < 0.5)
+    b4 = B.or_rowwise(bits, ritems, on)
+    exp = sets.copy()
+    for i in range(n):
+        if bool(on[i]):
+            exp[i, int(ritems[i])] = True
+    np.testing.assert_array_equal(np.asarray(B.unpack(b4, d)), exp)
+
+
+def test_overlap_popcount_vs_boolean_reference():
+    rng = np.random.default_rng(1)
+    n, k, d = 12, 9, 200
+    a = rng.random((n, d)) < 0.15
+    b = rng.random((k, d)) < 0.15
+    ab, bb = B.pack(jnp.array(a)), B.pack(jnp.array(b))
+    np.testing.assert_array_equal(
+        np.asarray(B.any_overlap(ab, bb)),
+        (a[:, None, :] & b[None, :, :]).any(-1))
+    np.testing.assert_array_equal(
+        np.asarray(B.overlap_rows(ab, B.pack(jnp.array(b[:n] if k >= n
+                                                       else a)))),
+        (a & (b[:n] if k >= n else a)).any(-1))
+    np.testing.assert_array_equal(np.asarray(B.popcount(ab)),
+                                  a.sum(-1).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(B.any_bit(ab)), a.any(-1))
+    # full-word patterns exercise the SWAR carry chains
+    full = jnp.full((2, 3), 0xFFFFFFFF, jnp.uint32)
+    np.testing.assert_array_equal(np.asarray(B.popcount(full)), [96, 96])
+
+
+def test_clear_rows_and_or_reduce():
+    rng = np.random.default_rng(2)
+    n, d = 8, 64
+    sets = rng.random((n, d)) < 0.4
+    bits = B.pack(jnp.array(sets))
+    mask = jnp.array(rng.random(n) < 0.5)
+    cleared = np.asarray(B.unpack(B.clear_rows(bits, mask), d))
+    exp = sets.copy()
+    exp[np.asarray(mask)] = False
+    np.testing.assert_array_equal(cleared, exp)
+    np.testing.assert_array_equal(
+        np.asarray(B.unpack(B.or_reduce(bits, axis=0), d)), sets.any(0))
+
+
+def test_word_bit_layout():
+    """Item x lives in word x >> 5 at bit x & 31 (DESIGN.md §1.1)."""
+    w, b = B.word_bit(jnp.arange(70, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(w), np.arange(70) // 32)
+    np.testing.assert_array_equal(np.asarray(b), np.arange(70) % 32)
+    one = B.pack(jnp.array([[False] * 37 + [True] + [False] * 26]))
+    assert int(one[0, 1]) == 1 << 5 and int(one[0, 0]) == 0
+
+
+# --------------------------------------------------------------------------
+# packed engine vs the boolean oracle: a full fig7 lane, all protocols
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("protocol", ["ppcc", "2pl", "occ"])
+def test_packed_fig7_lane_parity_vs_boolean_oracle(protocol):
+    """The packed-word engine must stay in the statistical family of the
+    seed's boolean semantics.  `pysim` (pure-Python event heap, boolean
+    sets) is that reference; bands match the established engine-vs-
+    oracle tolerances (RNG streams differ by construction)."""
+    p = paper_figure_params(7).with_(mpl=25, horizon=5_000.0, seed=0)
+    packed = jaxsim.simulate(p, protocol)
+    ref = sum(pysim.simulate(p.with_(seed=s), protocol).commits
+              for s in range(3)) / 3
+    assert packed.commits > 0
+    assert 0.55 * ref <= packed.commits <= 1.6 * ref, \
+        (protocol, packed.commits, ref)
