@@ -127,6 +127,17 @@ class EngCfg:
                                  # init and pop on commit instead of calling
                                  # sample_txns per iteration (fleet hot-path:
                                  # in-loop sampling was ~2/3 of body cost)
+    fused: bool = True           # ppcc: one fused cohort step (conflict →
+                                 # select → verdicts → wc) per iteration
+                                 # instead of the multipass chain; both
+                                 # paths are bit-identical (DESIGN.md §3)
+    order: str = "index"         # fused selection priority: "index" (the
+                                 # multipass-identical default) | "degree"
+    megakernel: bool = False     # fused relations from the Pallas
+                                 # cohort-step megakernel (one launch per
+                                 # quantum); compiled path — real
+                                 # accelerators only, CPU keeps the
+                                 # bit-identical jnp twin
 
 
 def _cfg(p: SimParams, max_iters: int) -> EngCfg:
@@ -661,12 +672,51 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
     wc_m = att & (done_reading | in_wc)
     read_m = att & ~(done_reading | in_wc)
 
-    # ---------------- read-phase cohort ----------------
+    # ---------------- read-phase + wait-to-commit cohorts --------------
     op_i = jnp.minimum(s.op_idx, cfg.max_ops - 1)
     cur_item = s.items[idx, op_i]
     cur_w = s.kinds[idx, op_i] == jnp.int8(1)
-    ps1, verdict, sel = _try_ops_cohort(cfg, s.pstate, cur_item, cur_w,
-                                        read_m)
+    if cfg.protocol == "ppcc" and cfg.fused:
+        # one fused pass over the packed words: conflict/party matrix →
+        # ordered selection → op verdicts + apply → lock winners →
+        # commit test.  read_m and wc_m are disjoint (a slot is in one
+        # phase), which is what licenses the fused step's pre-state
+        # write-write join (see cohort_step_fused).  Bit-identical to
+        # the multipass chain below under order="index".
+        rel = None
+        if cfg.megakernel:
+            from ..kernels import ops as kops
+            rel = kops.megastep_relations(
+                s.pstate.read_set, s.pstate.write_set, s.dirty, cur_item,
+                cur_w, s.pstate.active, read_m, s.pstate.haslocks)
+        fs = P.cohort_step_fused(s.pstate, cur_item, cur_w, read_m, wc_m,
+                                 order=cfg.order, relations=rel)
+        ps1 = ps2 = fs.state
+        verdict, sel = fs.verdict, fs.selected
+        flush_m = wc_m & fs.won & fs.can_commit
+        wait_prec_m = wc_m & fs.won & ~fs.can_commit
+        wait_lock_m = wc_m & ~fs.won
+        wc_abort = jnp.zeros(n, bool)
+    else:
+        ps1, verdict, sel = _try_ops_cohort(cfg, s.pstate, cur_item,
+                                            cur_w, read_m)
+        # The lax.cond gates in this body are pure perf guards: each
+        # branch is exact under an all-False mask.  Under vmap (fleet
+        # lanes) a cond decays into computing BOTH branches plus a
+        # full-state select, so fleet bodies run the masked computation
+        # directly instead.
+        if cfg.fleet:
+            ps2, flush_m, wait_lock_m, wait_prec_m, wc_abort = \
+                _wc_cohort(cfg, ps1, s.dirty, wc_m)
+        else:
+            ps2, flush_m, wait_lock_m, wait_prec_m, wc_abort = \
+                jax.lax.cond(
+                    wc_m.any(),
+                    lambda ps: _wc_cohort(cfg, ps, s.dirty, wc_m),
+                    lambda ps: (ps, jnp.zeros(n, bool),
+                                jnp.zeros(n, bool), jnp.zeros(n, bool),
+                                jnp.zeros(n, bool)),
+                    ps1)
     deferred = read_m & ~sel
     proceed = sel & (verdict == P.PROCEED)
     v_block = sel & (verdict == P.BLOCK)
@@ -676,22 +726,6 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
     rd_disk = proceed & ~cur_w
     wr_cpu = proceed & cur_w & ~was_last
     wr_wc = proceed & cur_w & was_last
-
-    # ---------------- wait-to-commit cohort (skipped when empty) -------
-    # The lax.cond gates in this body are pure perf guards: each branch
-    # is exact under an all-False mask.  Under vmap (fleet lanes) a cond
-    # decays into computing BOTH branches plus a full-state select, so
-    # fleet bodies run the masked computation directly instead.
-    if cfg.fleet:
-        ps2, flush_m, wait_lock_m, wait_prec_m, wc_abort = \
-            _wc_cohort(cfg, ps1, s.dirty, wc_m)
-    else:
-        ps2, flush_m, wait_lock_m, wait_prec_m, wc_abort = jax.lax.cond(
-            wc_m.any(),
-            lambda ps: _wc_cohort(cfg, ps, s.dirty, wc_m),
-            lambda ps: (ps, jnp.zeros(n, bool), jnp.zeros(n, bool),
-                        jnp.zeros(n, bool), jnp.zeros(n, bool)),
-            ps1)
     n_w = B.popcount(ps2.write_set)
     flush_io = flush_m & (n_w > 0)
     flush_zero = flush_m & (n_w == 0)
@@ -907,7 +941,8 @@ def make_engine(p: SimParams, protocol: str, max_iters: int = 400_000,
 def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
                        max_iters: int = 400_000, step_mode: str = "cohort",
                        cohort_dt: float = None, fleet: bool = False,
-                       pool: int = 0):
+                       pool: int = 0, fused: bool = True,
+                       order: str = "index"):
     """An engine whose MPL is a RUNTIME parameter (DESIGN.md §2.4).
 
     The slot axis is padded to the static bucket ``n_slots``; the
@@ -920,7 +955,8 @@ def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
     init, cond, step = engine_parts(p, protocol, max_iters=max_iters,
                                     step_mode=step_mode,
                                     cohort_dt=cohort_dt, n_slots=n_slots,
-                                    fleet=fleet, pool=pool)
+                                    fleet=fleet, pool=pool, fused=fused,
+                                    order=order)
 
     @jax.jit
     def _run(seed: jax.Array, mpl: jax.Array) -> EngState:
@@ -939,15 +975,23 @@ def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
 
 def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
                  step_mode: str = "cohort", cohort_dt: float = None,
-                 n_slots: int = None, fleet: bool = False, pool: int = 0):
+                 n_slots: int = None, fleet: bool = False, pool: int = 0,
+                 fused: bool = True, order: str = "index",
+                 megakernel: bool = None):
     """(init, cond, step) for single-stepping an engine from tests —
     e.g. checking protocol invariants after every cohort step.
 
     ``n_slots`` pads the slot axis beyond ``p.mpl`` (the padded-lane
     engine); ``init(seed, mpl=None)`` then takes the number of active
-    slots as a runtime value (default ``p.mpl``)."""
+    slots as a runtime value (default ``p.mpl``).  ``megakernel=None``
+    auto-gates the Pallas cohort-step megakernel to real accelerators
+    (on CPU the jnp twin inside ``ppcc.cohort_step_fused`` is both the
+    fast and the correct path; interpret-mode Pallas inside the engine
+    loop would be pure overhead)."""
     if step_mode not in ("cohort", "event"):
         raise ValueError(f"unknown step_mode: {step_mode!r}")
+    if megakernel is None:
+        megakernel = jax.default_backend() in ("tpu", "gpu")
     if cohort_dt is None:
         cohort_dt = default_cohort_dt(p)
     if n_slots is None:
@@ -956,7 +1000,8 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
         raise ValueError(f"n_slots={n_slots} < mpl={p.mpl}")
     cfg = dataclasses.replace(_cfg(p, max_iters), protocol=protocol,
                               cohort_dt=float(cohort_dt), n=n_slots,
-                              fleet=fleet, pool=pool)
+                              fleet=fleet, pool=pool, fused=fused,
+                              order=order, megakernel=megakernel)
 
     def init(seed, mpl=None) -> EngState:
         if mpl is None:

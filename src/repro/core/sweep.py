@@ -75,12 +75,17 @@ class Fleet:
     MPL and seed are runtime values: any grid of the same (M, S) shape
     with ``max(mpls) <= n_slots`` reuses the executable (``traces``
     stays at 1).
+
+    ``fused=False`` runs the ppcc lanes through the legacy multipass
+    cohort chain instead of ``ppcc.cohort_step_fused`` — bit-identical
+    results, kept for the fused-vs-multipass benchmark comparison.
     """
 
     def __init__(self, p: SimParams, protocols: Sequence[str] = PROTOCOLS,
                  n_slots: Optional[int] = None, max_iters: int = 400_000,
                  cohort_dt: Optional[float] = None, mesh=None,
-                 pool: Optional[int] = None):
+                 pool: Optional[int] = None, fused: bool = True,
+                 order: str = "index"):
         if n_slots is None:
             n_slots = slot_bucket(p.mpl)
         if pool is None:
@@ -97,7 +102,8 @@ class Fleet:
         parts = {
             proto: jaxsim.engine_parts(
                 p, proto, max_iters=max_iters, cohort_dt=cohort_dt,
-                n_slots=n_slots, fleet=True, pool=pool)
+                n_slots=n_slots, fleet=True, pool=pool, fused=fused,
+                order=order)
             for proto in self.protocols
         }
 
@@ -145,7 +151,7 @@ class Fleet:
 def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
               horizon: float, protocols: Sequence[str] = PROTOCOLS,
               n_slots: Optional[int] = None, max_iters: int = 400_000,
-              shard: bool = True,
+              shard: bool = True, fused: bool = True,
               ) -> Tuple[Dict[str, Dict[str, np.ndarray]], Fleet]:
     """Run one paper figure's full grid as a single compiled call.
 
@@ -159,7 +165,7 @@ def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
     n_lanes = len(mpl_grid) * len(seeds)
     mesh = fleet_mesh(n_lanes) if shard else None
     fleet = Fleet(p, protocols=protocols, n_slots=n_slots,
-                  max_iters=max_iters, mesh=mesh)
+                  max_iters=max_iters, mesh=mesh, fused=fused)
     out = fleet(list(mpl_grid), list(seeds))
     host = jax.tree.map(np.asarray, out)
     return host, fleet

@@ -132,3 +132,94 @@ def conflict_fused(read_bits: jax.Array, write_bits: jax.Array, *,
         ],
         interpret=interpret,
     )(read_bits, write_bits, write_bits)
+
+
+def _conflict_fused_full_kernel(r_ref, wi_ref, wj_ref, raw_ref, ww_ref,
+                                rdeg_ref, cdeg_ref, wdeg_ref, dr_ref,
+                                dw_ref, *, words: int, chunk: int):
+    """``conflict_fused`` plus the WAR *column* degrees and the two
+    diagonals — everything degree-ordered admission consumes, one
+    launch.  Row accumulators (rdeg/wdeg/diagonals) are revisited along
+    the fastest-varying ``j`` dimension and initialised at ``j == 0``;
+    the column accumulator (cdeg) is revisited along ``i`` and
+    initialised at ``i == 0``."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    raw_acc = jnp.zeros(raw_ref.shape, jnp.bool_)
+    ww_acc = jnp.zeros(ww_ref.shape, jnp.bool_)
+    for w0 in range(0, words, chunk):
+        w1 = min(w0 + chunk, words)
+        r = r_ref[:, w0:w1]
+        wi = wi_ref[:, w0:w1]
+        wj = wj_ref[:, w0:w1]
+        raw_acc = raw_acc | ((r[:, None, :] & wj[None, :, :]) != 0
+                             ).any(axis=-1)
+        ww_acc = ww_acc | ((wi[:, None, :] & wj[None, :, :]) != 0
+                           ).any(axis=-1)
+    raw_ref[...] = raw_acc
+    ww_ref[...] = ww_acc
+
+    @pl.when(j == 0)
+    def _init_rows():
+        rdeg_ref[...] = jnp.zeros(rdeg_ref.shape, jnp.int32)
+        wdeg_ref[...] = jnp.zeros(wdeg_ref.shape, jnp.int32)
+        dr_ref[...] = jnp.zeros(dr_ref.shape, jnp.bool_)
+        dw_ref[...] = jnp.zeros(dw_ref.shape, jnp.bool_)
+
+    @pl.when(i == 0)
+    def _init_cols():
+        cdeg_ref[...] = jnp.zeros(cdeg_ref.shape, jnp.int32)
+
+    rdeg_ref[...] += raw_acc.sum(axis=1).astype(jnp.int32)
+    cdeg_ref[...] += raw_acc.sum(axis=0).astype(jnp.int32)
+    wdeg_ref[...] += ww_acc.sum(axis=1).astype(jnp.int32)
+
+    @pl.when(i == j)
+    def _diag():
+        dr_ref[...] = jnp.diagonal(raw_acc)
+        dw_ref[...] = jnp.diagonal(ww_acc)
+
+
+def conflict_fused_full(read_bits: jax.Array, write_bits: jax.Array, *,
+                        block: int = 256, word_chunk: int = 128,
+                        interpret: bool = False):
+    """Single launch → (raw, ww, raw_deg, war_deg, ww_deg, diag_raw,
+    diag_ww); bit-identical to ``ref.conflict_fused_full_ref``.  The
+    extra column-degree and diagonal outputs make degree-ordered
+    admission (``sched.scheduler.ppcc_tick(order="degree")``) a
+    one-launch tick end to end — no second pass over the materialised
+    ``raw`` to form the ordering key."""
+    n, w = read_bits.shape
+    assert write_bits.shape == (n, w)
+    bi = min(block, n)
+    assert n % bi == 0, (n, bi)
+    grid = (n // bi, n // bi)
+    kernel = functools.partial(_conflict_fused_full_kernel, words=w,
+                               chunk=word_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bi, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bi, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bi, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+            pl.BlockSpec((bi,), lambda i, j: (j,)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.bool_),
+            jax.ShapeDtypeStruct((n, n), jnp.bool_),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.bool_),
+            jax.ShapeDtypeStruct((n,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(read_bits, write_bits, write_bits)

@@ -1,0 +1,195 @@
+"""Cohort-step megakernel: every pairwise relation of a fused PPCC
+cohort step in ONE Pallas launch (DESIGN.md §3).
+
+``ppcc.cohort_step_fused`` consumes five pairwise/rowwise relations per
+quantum: the op dependence matrix (party overlap + same-item-write),
+the per-op conflict degrees, the write-write join (wait-to-commit
+feasibility), the current-holder hit vector, and the op membership
+tables that feed the verdict phase.  Computed separately these re-read
+the packed ``uint32[n, W]`` set words once per relation; this kernel
+keeps the read/write/dirty words (and the per-slot op metadata)
+*resident in VMEM across the whole grid* — their BlockSpec index maps
+are constant, so at the paper scale (n=160, d=500 → 160x16 words ≈
+10 KiB per array) every phase reuses the same on-chip copy — and tiles
+the ``(n, n)`` pair space, with the per-row accumulators (degree,
+lock-hit, dirty-hit) riding the same grid: degree blocks are revisited
+across the fastest-varying ``j`` dimension and initialised at
+``j == 0``, exactly like ``conflict_fused``.
+
+The compiled path is gated to real accelerators
+(``ops.megastep_relations``); on CPU the kernel runs in interpret mode
+— the correctness twin that ``tests/test_megastep.py`` holds bit-equal
+to the ``ref.megastep_ref`` oracle and to the jnp single-pass twin
+inside ``ppcc.cohort_step_fused``.  ``n`` and ``d`` need not be
+multiples of the tile/lane width: rows pad with inert slots (inactive,
+not ready, no locks, zero words) that provably contribute to no
+relation, and the word axis is exact by the packed zero-pad-bit
+invariant (``core.bitset``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _megastep_kernel(read_ref, write_ref, dirty_ref, opw_ref, opb_ref,
+                     isw_ref, act_ref, rdy_ref, hl_ref,
+                     dep_ref, ww_ref, wat_ref, rat_ref,
+                     deg_ref, lockhit_ref, dirtyhit_ref, *,
+                     n: int, bi: int, bj: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+    gi = i * bi + jnp.arange(bi)                     # global row slot ids
+    gj = j * bj + jnp.arange(bj)
+
+    # resident packed words + op metadata (full arrays, constant blocks)
+    read_w = read_ref[...]                           # uint32[n, W]
+    write_w = write_ref[...]                         # uint32[n, W]
+    opw = opw_ref[...]                               # int32[n] item word
+    opb = opb_ref[...]                               # uint32[n] item bit
+    isw = isw_ref[...]                               # bool[n]
+    act = act_ref[...]                               # bool[n]
+    rdy = rdy_ref[...]                               # bool[n]
+    hl = hl_ref[...]                                 # bool[n]
+
+    def tile(vec, g0, b):
+        return jax.lax.dynamic_slice_in_dim(vec, g0, b)
+
+    opw_i, opb_i, isw_i = tile(opw, i * bi, bi), tile(opb, i * bi, bi), \
+        tile(isw, i * bi, bi)
+    opw_j, opb_j, isw_j = tile(opw, j * bj, bj), tile(opb, j * bj, bj), \
+        tile(isw, j * bj, bj)
+
+    def memb(words, w_idx, b_idx):
+        """[n, m]: item (w_idx, b_idx)[x] present in words row k."""
+        cols = jnp.take(words, w_idx, axis=1)        # [n, m] uint32
+        return ((cols >> b_idx[None, :]) & 1).astype(bool)
+
+    # op membership tables over ALL slots (phase: conflict/party matrix)
+    w_at_i = memb(write_w, opw_i, opb_i)             # [n, bi]
+    r_at_i = memb(read_w, opw_i, opb_i)
+    w_at_j = memb(write_w, opw_j, opb_j)             # [n, bj]
+    r_at_j = memb(read_w, opw_j, opb_j)
+
+    def party(w_at, r_at, is_w, g):
+        others = jnp.where(is_w[None, :], r_at, w_at)
+        self_k = jnp.arange(n)[:, None] == g[None, :]
+        return (others & act[:, None] & ~self_k) | self_k
+
+    p_i = party(w_at_i, r_at_i, isw_i, gi)           # [n, bi]
+    p_j = party(w_at_j, r_at_j, isw_j, gj)           # [n, bj]
+    join = (p_i.astype(jnp.int32).T @ p_j.astype(jnp.int32)) > 0
+    same_item = (opw_i[:, None] == opw_j[None, :]) & \
+        (opb_i[:, None] == opb_j[None, :])
+    either_w = isw_i[:, None] | isw_j[None, :]
+    eye = gi[:, None] == gj[None, :]
+    dep = (join | (same_item & either_w)) & ~eye
+    dep_ref[...] = dep
+
+    # write-write join straight off the resident words (wc feasibility)
+    wi = jax.lax.dynamic_slice_in_dim(write_w, i * bi, bi)   # [bi, W]
+    wj = jax.lax.dynamic_slice_in_dim(write_w, j * bj, bj)   # [bj, W]
+    ww = ((wi[:, None, :] & wj[None, :, :]) != 0).any(axis=-1) & ~eye
+    ww_ref[...] = ww
+
+    # verdict-phase op tables: {write,read}_set[k=col, item[row]]
+    wat_ref[...] = jax.lax.dynamic_slice_in_dim(w_at_i.T, j * bj, bj,
+                                                axis=1)
+    rat_ref[...] = jax.lax.dynamic_slice_in_dim(r_at_i.T, j * bj, bj,
+                                                axis=1)
+
+    # per-row accumulators ride the j grid dim (init on first visit)
+    @pl.when(j == 0)
+    def _init():
+        deg_ref[...] = jnp.zeros(deg_ref.shape, jnp.int32)
+        lockhit_ref[...] = jnp.zeros(lockhit_ref.shape, jnp.bool_)
+        di = jax.lax.dynamic_slice_in_dim(dirty_ref[...], i * bi, bi)
+        dirtyhit_ref[...] = ((jax.lax.dynamic_slice_in_dim(
+            read_w, i * bi, bi) & di) != 0).any(axis=-1)
+
+    rdy_j = tile(rdy, j * bj, bj)
+    hl_j = tile(hl, j * bj, bj)
+    deg_ref[...] += (dep & rdy_j[None, :]).sum(axis=1).astype(jnp.int32)
+    lockhit_ref[...] |= (ww & hl_j[None, :]).any(axis=1)
+
+
+def megastep(read_bits: jax.Array, write_bits: jax.Array,
+             dirty_bits: jax.Array, item: jax.Array, is_write: jax.Array,
+             active: jax.Array, ready: jax.Array, haslocks: jax.Array, *,
+             block: int = 32, interpret: bool = False):
+    """One launch → every relation of a fused cohort step.
+
+    Inputs: packed ``uint32[n, W]`` read/write/dirty words, per-slot op
+    ``item`` (int32), and the ``is_write``/``active``/``ready``/
+    ``haslocks`` flag vectors.  Returns
+
+        dep       bool[n, n]  op dependence (party overlap | same-item
+                              with a write), diagonal False
+        ww        bool[n, n]  write-write overlap, diagonal False
+        writers_at bool[n, n] [i, k] = item_i in write_set[k]
+        readers_at bool[n, n] [i, k] = item_i in read_set[k]
+        deg       int32[n]    (dep & ready).sum(axis=1)
+        lockhit   bool[n]     (ww & haslocks).any(axis=1)
+        dirty_hit bool[n]     read row intersects dirty row
+
+    bit-for-bit equal to ``ref.megastep_ref``.  ``n`` may be any size:
+    the slot axis pads to the tile width with inert slots and outputs
+    are sliced back.
+    """
+    n, w = read_bits.shape
+    assert write_bits.shape == (n, w) and dirty_bits.shape == (n, w)
+    bi = min(block, max(n, 1))
+    pad = (-n) % bi
+    if pad:
+        zrow = jnp.zeros((pad, w), jnp.uint32)
+        read_bits = jnp.concatenate([read_bits, zrow])
+        write_bits = jnp.concatenate([write_bits, zrow])
+        dirty_bits = jnp.concatenate([dirty_bits, zrow])
+        item = jnp.concatenate([item, jnp.zeros(pad, item.dtype)])
+        zflag = jnp.zeros(pad, bool)
+        is_write = jnp.concatenate([is_write, zflag])
+        active = jnp.concatenate([active, zflag])
+        ready = jnp.concatenate([ready, zflag])
+        haslocks = jnp.concatenate([haslocks, zflag])
+    np_ = n + pad
+    grid = (np_ // bi, np_ // bi)
+    opw = (item >> 5).astype(jnp.int32)
+    opb = (item & 31).astype(jnp.uint32)
+    kernel = functools.partial(_megastep_kernel, n=np_, bi=bi, bj=bi)
+    full = lambda *shape: pl.BlockSpec(shape, lambda i, j: (0,) * len(shape))  # noqa: E731
+    dep, ww, wat, rat, deg, lockhit, dirty_hit = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            full(np_, w), full(np_, w), full(np_, w),           # words
+            full(np_), full(np_),                               # opw/opb
+            full(np_), full(np_), full(np_), full(np_),         # flags
+        ],
+        out_specs=[
+            pl.BlockSpec((bi, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+            pl.BlockSpec((bi,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, np_), jnp.bool_),
+            jax.ShapeDtypeStruct((np_, np_), jnp.bool_),
+            jax.ShapeDtypeStruct((np_, np_), jnp.bool_),
+            jax.ShapeDtypeStruct((np_, np_), jnp.bool_),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.bool_),
+            jax.ShapeDtypeStruct((np_,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(read_bits, write_bits, dirty_bits, opw, opb, is_write, active,
+      ready, haslocks)
+    if pad:
+        dep, ww, wat, rat = (m[:n, :n] for m in (dep, ww, wat, rat))
+        deg, lockhit, dirty_hit = (v[:n] for v in (deg, lockhit,
+                                                   dirty_hit))
+    return dep, ww, wat, rat, deg, lockhit, dirty_hit

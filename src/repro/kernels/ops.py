@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from . import conflict as _conflict
 from . import flash_attention as _flash
+from . import megastep as _megastep
 from . import wkv as _wkv
 from . import ref  # noqa: F401  (re-exported for tests/benchmarks)
 
@@ -46,6 +47,26 @@ def conflict_fused(read_bits, write_bits, *, block: int = 256):
     return _conflict.conflict_fused(
         read_bits, write_bits, block=block,
         interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def conflict_fused_full(read_bits, write_bits, *, block: int = 256):
+    """One launch -> (raw, ww, raw_deg, war_deg, ww_deg, diag_raw,
+    diag_ww) — the degree-ordered admission tick's whole input."""
+    return _conflict.conflict_fused_full(
+        read_bits, write_bits, block=block,
+        interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def megastep_relations(read_bits, write_bits, dirty_bits, item, is_write,
+                       active, ready, haslocks, *, block: int = 32):
+    """Cohort-step megakernel: one launch -> (dep, ww, writers_at,
+    readers_at, deg, lockhit, dirty_hit); see kernels.megastep.
+    Compiled on real accelerators, interpret mode on CPU."""
+    return _megastep.megastep(
+        read_bits, write_bits, dirty_bits, item, is_write, active, ready,
+        haslocks, block=block, interpret=_interpret_default())
 
 
 # the protocol-wide packer (repro.core.bitset.pack), jitted; conflict

@@ -50,6 +50,50 @@ def conflict_fused_ref(read_bits: jax.Array, write_bits: jax.Array):
             ww.sum(axis=1).astype(jnp.int32))
 
 
+def conflict_fused_full_ref(read_bits: jax.Array, write_bits: jax.Array):
+    """Oracle for ``conflict_fused_full``: everything degree-ordered
+    admission needs from ONE launch — (raw, ww, raw_deg, war_deg,
+    ww_deg, diag_raw, diag_ww).  ``war_deg`` is the COLUMN sum of raw
+    (who reads what I write); row/column degrees include the diagonal,
+    the diag vectors let callers strip self-conflicts."""
+    raw = conflict_matrix_ref(read_bits, write_bits)
+    ww = conflict_matrix_ref(write_bits, write_bits)
+    return (raw, ww, raw.sum(axis=1).astype(jnp.int32),
+            raw.sum(axis=0).astype(jnp.int32),
+            ww.sum(axis=1).astype(jnp.int32),
+            jnp.diagonal(raw), jnp.diagonal(ww))
+
+
+def megastep_ref(read_bits: jax.Array, write_bits: jax.Array,
+                 dirty_bits: jax.Array, item: jax.Array,
+                 is_write: jax.Array, active: jax.Array, ready: jax.Array,
+                 haslocks: jax.Array):
+    """Oracle for the cohort-step megakernel (``kernels.megastep``):
+    (dep, ww, writers_at, readers_at, deg, lockhit, dirty_hit) — the
+    same relations ``ppcc.cohort_step_fused`` derives per quantum.
+    ``item`` is slot i's pending op item; party/dependence semantics
+    follow DESIGN.md §2.3."""
+    n = read_bits.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    w_idx, b_idx = item >> 5, (item & 31).astype(jnp.uint32)
+    # op tables: [i, k] = item_i present in {write,read}_set[k]
+    writers_at = ((write_bits[:, w_idx] >> b_idx[None, :])
+                  & jnp.uint32(1)).astype(bool).T
+    readers_at = ((read_bits[:, w_idx] >> b_idx[None, :])
+                  & jnp.uint32(1)).astype(bool).T
+    others = jnp.where(is_write[:, None], readers_at, writers_at)
+    party = (others & active[None, :] & ~eye) | eye
+    dep = (party[:, None, :] & party[None, :, :]).any(axis=-1)
+    same_item = item[:, None] == item[None, :]
+    either_w = is_write[:, None] | is_write[None, :]
+    dep = (dep | (same_item & either_w)) & ~eye
+    deg = (dep & ready[None, :]).sum(axis=1).astype(jnp.int32)
+    ww = conflict_matrix_ref(write_bits, write_bits) & ~eye
+    lockhit = (ww & haslocks[None, :]).any(axis=1)
+    dirty_hit = ((read_bits & dirty_bits) != 0).any(axis=-1)
+    return dep, ww, writers_at, readers_at, deg, lockhit, dirty_hit
+
+
 def wkv_ref(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
             u: jax.Array, head_dim: int,
             state0: Optional[jax.Array] = None):

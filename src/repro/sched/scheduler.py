@@ -95,18 +95,22 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
     n = read_sets.shape[0]
     rb = _as_bits(read_sets)
     wb = _as_bits(write_sets)
-    raw, ww, raw_deg, ww_deg = _conflict_matrices(rb, wb, use_kernel)
     if order == "degree":
-        # total involvement = RAW out-degree (kernel row popcounts)
-        # + WAR in-degree (column sums of the materialized raw)
-        # + WW degree; kernel degrees include the diagonal and
-        # self-conflicts are not conflicts here, so strip it everywhere
-        self_r = jnp.diagonal(raw).astype(jnp.int32)
-        deg = (raw_deg - self_r
-               + raw.sum(axis=0, dtype=jnp.int32) - self_r
-               + ww_deg - jnp.diagonal(ww).astype(jnp.int32))
+        # total involvement = RAW out-degree + WAR in-degree (the
+        # kernel's column-sum output) + WW degree; kernel degrees
+        # include the diagonal and self-conflicts are not conflicts
+        # here, so strip it everywhere.  One fused launch emits the
+        # matrices, all three degrees AND the diagonals — the ordering
+        # key costs no extra pass over the materialised raw.
+        full = (kops.conflict_fused_full(rb, wb) if use_kernel
+                else kops.ref.conflict_fused_full_ref(rb, wb))
+        raw, ww, raw_deg, war_deg, ww_deg, diag_raw, diag_ww = full
+        self_r = diag_raw.astype(jnp.int32)
+        deg = (raw_deg - self_r + war_deg - self_r
+               + ww_deg - diag_ww.astype(jnp.int32))
         seq = jnp.argsort(deg, stable=True).astype(jnp.int32)
     else:
+        raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
         seq = jnp.arange(n, dtype=jnp.int32)
     raw = raw & ~jnp.eye(n, dtype=bool)              # self-RAW is not a conflict
 

@@ -119,6 +119,64 @@ def test_admit_ops_blocked_bitwise_equals_admit_ops(seed):
     _state_equal(a.state, b.state)
 
 
+@pytest.mark.parametrize("seed", range(3))
+def test_admit_ops_blocked_degree_order_equals_permuted_admit_ops(seed):
+    """``order="degree"`` is exactly ``admit_ops`` on the degree-sorted
+    op list, with verdicts reported back in submission order."""
+    rng = np.random.default_rng(300 + seed)
+    n, d, m = 16, 40, 100
+    s = ppcc.init_state(n, d)
+    for i in range(n):
+        s = ppcc.begin(s, I(i))
+    txn = jnp.array(rng.integers(0, n, m), I)
+    item = jnp.array(rng.integers(0, d, m), I)
+    wr = jnp.array(rng.random(m) < 0.3)
+    valid = jnp.array(rng.random(m) < 0.9)
+    perm = ppcc.admit_order_degree(s, txn, item, wr, valid)
+    pn = np.asarray(perm)
+    assert sorted(pn.tolist()) == list(range(m))      # a permutation
+    # per-transaction op order is preserved (rank is the primary key)
+    tn = np.asarray(txn)
+    for t in range(n):
+        mine = pn[tn[pn] == t]
+        assert (np.diff(mine) > 0).all() or mine.size <= 1
+    a = ppcc.admit_ops(s, txn[perm], item[perm], wr[perm], valid[perm])
+    b = ppcc.admit_ops_blocked(s, txn, item, wr, valid, block=16,
+                               order="degree")
+    np.testing.assert_array_equal(np.asarray(a.admitted),
+                                  np.asarray(b.admitted)[pn])
+    np.testing.assert_array_equal(np.asarray(a.blocked),
+                                  np.asarray(b.blocked)[pn])
+    np.testing.assert_array_equal(np.asarray(a.aborted),
+                                  np.asarray(b.aborted)[pn])
+    _state_equal(a.state, b.state)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_cohort_step_fused_matches_multipass_substeps(seed):
+    """One fused call == select -> try_ops_batched -> wc_acquire_many ->
+    can_commit_many, bit for bit (order="index")."""
+    rng = np.random.default_rng(400 + seed)
+    n, d = 14, 36
+    s = _warmed_state(rng, n, d, ops=40)
+    wc_mask = jnp.array(rng.random(n) < 0.3)
+    s, _ = ppcc.wc_acquire_many(s, wc_mask, exact=False)
+    item = jnp.array(rng.integers(0, d, n), I)
+    is_w = jnp.array(rng.random(n) < 0.4)
+    ready = jnp.array(rng.random(n) < 0.7) & ~wc_mask
+    fs = ppcc.cohort_step_fused(s, item, is_w, ready, wc_mask)
+    sel = ppcc.cohort_select(s, item, is_w, ready)
+    s1, verdict = ppcc.try_ops_batched(s, item, is_w, sel)
+    s2, won = ppcc.wc_acquire_many(s1, wc_mask, exact=False)
+    np.testing.assert_array_equal(np.asarray(fs.selected), np.asarray(sel))
+    np.testing.assert_array_equal(np.asarray(fs.verdict),
+                                  np.asarray(verdict))
+    np.testing.assert_array_equal(np.asarray(fs.won), np.asarray(won))
+    np.testing.assert_array_equal(np.asarray(fs.can_commit),
+                                  np.asarray(ppcc.can_commit_many(s2)))
+    _state_equal(fs.state, s2)
+
+
 # --------------------------------------------------------------------------
 # engine-level parity (the test_jaxsim_vs_pysim grid)
 # --------------------------------------------------------------------------
@@ -162,10 +220,12 @@ def test_cohort_fewer_iterations_than_event():
 # Theorem-1 invariants after every cohort step
 # --------------------------------------------------------------------------
 
-def test_invariants_hold_after_every_cohort_step():
+@pytest.mark.parametrize("fused", [True, False])
+def test_invariants_hold_after_every_cohort_step(fused):
     p = SimParams(db_size=50, txn_size_mean=8, write_prob=0.5, mpl=24,
                   horizon=1_500.0, seed=3)
-    init, cond, step = jaxsim.engine_parts(p, "ppcc", step_mode="cohort")
+    init, cond, step = jaxsim.engine_parts(p, "ppcc", step_mode="cohort",
+                                           fused=fused)
     s = init(0)
     steps = 0
     while bool(cond(s)) and steps < 400:
@@ -177,3 +237,27 @@ def test_invariants_hold_after_every_cohort_step():
         assert bool(ppcc.classes_consistent(s.pstate)), \
             f"class bits inconsistent after step {steps}"
     assert steps > 50 and int(s.commits) > 0
+
+
+@pytest.mark.parametrize("fleet", [False, True])
+def test_fused_engine_bit_identical_to_multipass(fleet):
+    """The fused cohort body (one ``cohort_step_fused`` call) must walk
+    the exact same trajectory as the legacy multipass body
+    (select -> try_ops -> wc -> commit as separate joins)."""
+    p = SimParams(db_size=100, txn_size_mean=8, write_prob=0.3, mpl=16,
+                  horizon=2_000.0, seed=7)
+    states = []
+    for fused in (True, False):
+        init, cond, step = jaxsim.engine_parts(
+            p, "ppcc", step_mode="cohort", fused=fused, fleet=fleet)
+        s = init(0)
+        it = 0
+        while bool(cond(s)) and it < 1500:
+            s = step(s)
+            it += 1
+        states.append((s, it))
+    (sf, itf), (sm, itm) = states
+    assert itf == itm
+    assert int(sf.commits) > 0
+    for a, b in zip(jax.tree.leaves(sf), jax.tree.leaves(sm)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
