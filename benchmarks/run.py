@@ -3,18 +3,30 @@
 Paper: Xiong, Yu, Hamdi, Hou, "A Prudent-Precedence Concurrency Control
 Protocol for High Data Contention Database Environments" (IJDMS 2016).
 
-* ``fig5`` .. ``fig16``: throughput-vs-MPL curves for PPCC / 2PL / OCC
-  under the paper's parameter grid (Table 1), reporting peak throughput
-  and the PPCC improvement over 2PL / OCC next to the paper's numbers.
-  Each figure's (protocol x MPL x seed) grid runs as ONE compiled
-  padded-lane fleet (``repro.core.sweep``, DESIGN.md §2.4); ``--oracle``
-  additionally cross-checks mid-grid points against the event-heap
-  Python oracle (``repro.core.pysim``).  Every figure run checks the
-  reproduced peaks against ``PAPER_PEAKS`` (horizon-scaled, relative
-  tolerance ``--peak-tol``): drift is warn-only at smoke horizons and
-  fails the process (exit 1) under ``--full``; ``--full`` figure runs
+* ``figs`` (default): throughput-vs-MPL curves for PPCC / 2PL / OCC
+  for EVERY paper figure (5-16), reporting peak throughput and the
+  PPCC improvement over 2PL / OCC next to the paper's numbers.  The
+  whole Table-1 grid runs as ONE compiled bucketed fleet executable
+  (``repro.core.sweep.run_grid``, DESIGN.md §2.4).  Every figure
+  checks its reproduced peaks against ``PAPER_PEAKS`` (horizon-scaled,
+  relative tolerance ``--peak-tol``); that check gates (exit 1) only
+  under ``--full`` at the paper's 100k horizon — short horizons have
+  not converged to linear scaling (2PL peaks land up to 66% low at
+  20k), so below 100k it is warn-only.  The *nightly* bounded-horizon
+  gate instead compares against ``REPRO_PEAKS_20K``, a pinned snapshot
+  of this commit's own 20k peaks: ``--full --horizon 20000`` fails the
+  process when any (figure, protocol) peak drifts more than
+  ``--peak-tol`` from the snapshot — a regression gate on the protocol
+  physics that costs ~1/5th of a paper run.  ``--full`` runs at 100k
   are additionally recorded into ``BENCH_sweep.json["figures"]`` with
   per-figure paper deltas.
+* ``fig5`` .. ``fig16`` (``--only``): a single figure through its own
+  per-figure fleet; ``--oracle`` additionally cross-checks mid-grid
+  points against the event-heap Python oracle (``repro.core.pysim``).
+* ``one_exec`` (``--only``): the single bucketed grid executable vs
+  the per-figure-jit baseline — cold/warm walls with an inline
+  per-figure bit-identity assert; writes
+  ``BENCH_sweep.json["one_exec_vs_per_fig"]``.
 * ``sweep``: fleet sweep vs the per-point cohort-engine loop on the
   fig7 grid; writes ``BENCH_sweep.json``, including the packed-bitset
   vs boolean-representation fleet-body timing comparison.
@@ -47,7 +59,7 @@ MPL_GRID = (5, 10, 25, 50, 75, 100, 150)
 HORIZON = 20_000.0
 SEEDS = (0,)
 PROTOCOLS = ("ppcc", "2pl", "occ")
-PEAK_TOL = 0.35          # relative tolerance vs horizon-scaled PAPER_PEAKS
+PEAK_TOL = 0.35  # rel tol: paper gate (100k) and 20k-snapshot gate alike
 
 # Boolean-representation fleet baseline for the packed-bitset
 # comparison (DESIGN.md §1.1): measured at this PR's base commit
@@ -96,9 +108,59 @@ def _host_fingerprint():
     import platform
     return (platform.node(), os.cpu_count(), platform.machine())
 
+
+def _timing_record(**fields) -> dict:
+    """A timing record with the host fingerprint stamped at write time.
+
+    EVERY wall-time record in BENCH_sweep.json goes through here: wall
+    times are host-specific, and a record without its host cannot be
+    compared honestly later (the PR-6 ``packed_after`` records shipped
+    fingerprint-less and were uncomparable by inspection).
+    """
+    return {**fields, "host": list(_host_fingerprint())}
+
+
+def _comparable(now: dict, baseline: dict) -> bool:
+    """Uniform comparable_config rule for speedup claims: identical
+    horizon / seed count / device count AND the same host fingerprint.
+    Records missing any of these keys are never comparable."""
+    keys = ("horizon", "seeds", "devices", "host")
+    if any(k not in now or k not in baseline for k in keys):
+        return False
+    return all(list(now[k]) == list(baseline[k]) if k == "host"
+               else now[k] == baseline[k] for k in keys)
+
+
 # (fig, protocol, repro_peak, expected_peak, rel_delta) rows collected
 # by figure benches; main() fails the process on drift under --full.
 PEAK_DRIFTS = []
+
+# Pinned peaks (ppcc, 2pl, occ) of the figs 5-16 grid at the BOUNDED
+# nightly horizon: measured by `--only figs --full --horizon 20000`
+# (seeds 0,1,2, jax 0.4.37 CPU, the one-executable run_grid path) at
+# the commit that introduced the bucketed grid executable.  The
+# paper-scaled PAPER_PEAKS tolerance does NOT hold at 20k — curves
+# converge sublinearly and 2PL worst of all (measured rel_delta down
+# to -0.66 on fig16) — so the nightly gates against THIS snapshot
+# instead: any drift beyond --peak-tol means the protocol physics
+# changed, independent of paper convergence.  Values carry the report
+# rounding (±0.5 commit); re-pin whenever a PR intentionally changes
+# simulator behaviour (the 100k paper gate still bounds the result).
+SNAPSHOT_HORIZON = 20_000.0
+REPRO_PEAKS_20K = {
+    5: (525.0, 497.0, 385.0),
+    6: (330.0, 268.0, 250.0),
+    7: (191.0, 175.0, 146.0),
+    8: (81.0, 59.0, 76.0),
+    9: (494.0, 474.0, 350.0),
+    10: (240.0, 175.0, 205.0),
+    11: (157.0, 141.0, 129.0),
+    12: (53.0, 39.0, 59.0),
+    13: (1568.0, 1232.0, 1140.0),
+    14: (405.0, 276.0, 517.0),
+    15: (1158.0, 714.0, 930.0),
+    16: (244.7, 151.0, 367.0),
+}
 
 
 def _row(name: str, us: float, derived: str) -> None:
@@ -115,18 +177,13 @@ def _load_json(path: Path) -> dict:
     return {}
 
 
-def run_figure(fig: int, horizon: float, seeds=SEEDS, mpl_grid=MPL_GRID,
-               oracle: bool = False):
-    """One figure's grid through the padded-lane fleet (one executable)."""
-    from repro.core import sweep as fleet_sweep
+def _figure_report(fig: int, out_fig: dict, horizon: float, wall: float):
+    """Peak/improvement CSV rows for one figure's fleet output block."""
     from repro.core.types import PAPER_PEAKS
 
-    t0 = time.time()
-    out, _fleet = fleet_sweep.run_fleet(fig, mpl_grid, seeds, horizon)
-    wall = (time.time() - t0) * 1e6
     peaks, curves = {}, {}
     for proto in PROTOCOLS:
-        curve = out[proto]["commits"].mean(axis=1)
+        curve = out_fig[proto]["commits"].mean(axis=1)
         curves[proto] = [float(c) for c in curve]
         peaks[proto] = float(curve.max())
     imp_2pl = 100.0 * (peaks["ppcc"] - peaks["2pl"]) / max(peaks["2pl"], 1)
@@ -140,6 +197,18 @@ def run_figure(fig: int, horizon: float, seeds=SEEDS, mpl_grid=MPL_GRID,
              f" paper_scaled={ref_peak * scale:.0f} wall=fleet-total")
     _row(f"fig{fig}_improvement", wall,
          f"ppcc_vs_2pl={imp_2pl:+.1f}% ppcc_vs_occ={imp_occ:+.1f}%")
+    return peaks, curves
+
+
+def run_figure(fig: int, horizon: float, seeds=SEEDS, mpl_grid=MPL_GRID,
+               oracle: bool = False):
+    """One figure's grid through the padded-lane fleet (one executable)."""
+    from repro.core import sweep as fleet_sweep
+
+    t0 = time.time()
+    out, _fleet = fleet_sweep.run_fleet(fig, mpl_grid, seeds, horizon)
+    wall = (time.time() - t0) * 1e6
+    peaks, curves = _figure_report(fig, out, horizon, wall)
     if oracle:
         _oracle_rows(fig, horizon, mpl_grid, out)
     return peaks, curves
@@ -161,21 +230,41 @@ def _peak_deltas(fig: int, peaks: dict, horizon: float) -> dict:
 
 def _check_peak_drift(fig: int, peaks: dict, horizon: float, full: bool,
                       tol: float) -> dict:
-    """Compare reproduced peaks against PAPER_PEAKS.  At full horizon a
-    violation is recorded in PEAK_DRIFTS (main() exits nonzero); smoke
-    horizons only warn — short runs land far from the scaled peaks (the
-    throughput-vs-MPL curve has not converged), so failing there would
-    make every CI smoke red."""
+    """Two drift gates over one figure's peaks (both append to
+    PEAK_DRIFTS; main() exits nonzero when it is non-empty).
+
+    * Paper gate: reproduced vs horizon-scaled PAPER_PEAKS.  Fails only
+      under ``--full`` at the paper's 100k horizon — shorter runs land
+      far from the scaled peaks (the throughput-vs-MPL curve converges
+      sublinearly, 2PL worst), so below 100k this is warn-only.
+    * Snapshot gate: under ``--full`` at exactly the bounded 20k
+      nightly horizon, reproduced vs the pinned REPRO_PEAKS_20K
+      snapshot — a regression gate on the simulator itself.
+    """
     deltas = _peak_deltas(fig, peaks, horizon)
+    paper_gate = full and horizon >= 100_000.0
     for proto, rec in deltas.items():
         rel = rec["rel_delta"]
         if abs(rel) > tol:
-            status = "DRIFT" if full else "drift-warn-only-at-smoke-horizon"
+            status = ("DRIFT" if paper_gate
+                      else "drift-warn-only-below-paper-horizon")
             _row(f"fig{fig}_{proto}_peak_drift", 0.0,
                  f"rel_delta={rel:+.3f} tol={tol} status={status}")
-            if full:
+            if paper_gate:
                 PEAK_DRIFTS.append((fig, proto, rec["repro_peak"],
                                     rec["paper_peak_scaled"], rel))
+    if full and horizon == SNAPSHOT_HORIZON and fig in REPRO_PEAKS_20K:
+        snap = dict(zip(PROTOCOLS, REPRO_PEAKS_20K[fig]))
+        for proto in PROTOCOLS:
+            rel = (peaks[proto] - snap[proto]) / max(snap[proto], 1.0)
+            deltas[proto]["snapshot_peak"] = snap[proto]
+            deltas[proto]["snapshot_rel_delta"] = round(rel, 4)
+            if abs(rel) > tol:
+                _row(f"fig{fig}_{proto}_snapshot_drift", 0.0,
+                     f"rel_delta={rel:+.3f} tol={tol} status=DRIFT"
+                     f" ref=pinned-20k-snapshot")
+                PEAK_DRIFTS.append((fig, proto, round(peaks[proto], 1),
+                                    snap[proto], round(rel, 4)))
     return deltas
 
 
@@ -222,20 +311,48 @@ def make_fig_fn(fig: int):
         seeds = (0, 1, 2) if args.full else SEEDS
         peaks, curves = run_figure(fig, horizon, seeds=seeds,
                                    oracle=args.oracle)
-        # drift only *fails* — and figures are only *recorded* — at the
-        # paper horizon: smoke horizons have not converged to the scaled
-        # peaks (warn-only), and recording them would overwrite converged
-        # BENCH_sweep.json figure records with unconverged curves
-        full_horizon = args.full and horizon >= 100_000.0
-        deltas = _check_peak_drift(fig, peaks, horizon, full_horizon,
+        deltas = _check_peak_drift(fig, peaks, horizon, args.full,
                                    args.peak_tol)
-        if full_horizon:
+        if args.full and horizon >= 100_000.0:
             _record_figure(args, fig, horizon, seeds, deltas, curves)
     f.__name__ = f"fig{fig}"
     return f
 
 
 FIGS = {f"fig{i}": make_fig_fn(i) for i in range(5, 17)}
+
+
+def figs(args):
+    """Figs 5-16 through ONE bucketed fleet executable (DESIGN.md §2.4).
+
+    The default figure path: ``sweep.run_grid`` pads every figure's
+    lanes into the shared static buckets (500-item words, 20-op lists,
+    16/32 resource pools) so the whole Table-1 grid compiles exactly
+    once — per-figure results are bit-identical to the per-figure
+    fleets (asserted by the ``one_exec`` bench and
+    tests/test_bucketing.py).  Per-figure peak rows, drift checks and
+    ``--full`` recording are identical to the ``fig5``..``fig16``
+    benches (still available via ``--only`` for single-figure runs,
+    e.g. with ``--oracle``).
+    """
+    from repro.core import sweep as fleet_sweep
+    from repro.core.types import GRID_FIGS
+
+    horizon = args.horizon or (100_000.0 if args.full else HORIZON)
+    seeds = (0, 1, 2) if args.full else SEEDS
+    t0 = time.time()
+    out, fleet = fleet_sweep.run_grid(GRID_FIGS, MPL_GRID, seeds, horizon)
+    wall = (time.time() - t0) * 1e6
+    lanes = len(GRID_FIGS) * len(MPL_GRID) * len(seeds)
+    _row("figs_grid_fleet", wall,
+         f"figures={len(GRID_FIGS)} lanes={lanes}"
+         f" traces={fleet.traces} n_slots={fleet.n_slots}")
+    for fig in GRID_FIGS:
+        peaks, curves = _figure_report(fig, out[fig], horizon, wall)
+        deltas = _check_peak_drift(fig, peaks, horizon, args.full,
+                                   args.peak_tol)
+        if args.full and horizon >= 100_000.0:
+            _record_figure(args, fig, horizon, seeds, deltas, curves)
 
 
 def _sched_admit_us():
@@ -505,16 +622,11 @@ def sweep(args):
     # packed-bitset representation vs the boolean baseline (measured at
     # the PR base commit; see BOOLEAN_FLEET_BASELINE).  warm = pure
     # fleet-body time; comparable only on the baseline's config.
-    packed_now = {"horizon": horizon, "seeds": len(seeds),
-                  "cold_wall_s": round(after_s, 2),
-                  "warm_wall_s": round(rerun_s, 2),
-                  "devices": jax.device_count(),
-                  "n_slots": fleet.n_slots}
-    comparable = (
-        horizon == BOOLEAN_FLEET_BASELINE["horizon"]
-        and len(seeds) == BOOLEAN_FLEET_BASELINE["seeds"]
-        and jax.device_count() == BOOLEAN_FLEET_BASELINE["devices"]
-        and _host_fingerprint() == tuple(BOOLEAN_FLEET_BASELINE["host"]))
+    packed_now = _timing_record(
+        horizon=horizon, seeds=len(seeds),
+        cold_wall_s=round(after_s, 2), warm_wall_s=round(rerun_s, 2),
+        devices=jax.device_count(), n_slots=fleet.n_slots)
+    comparable = _comparable(packed_now, BOOLEAN_FLEET_BASELINE)
     packed_vs_boolean = {
         "what": "fig7-grid fleet wall time: packed uint32[n, d/32] sets "
                 "(this commit) vs bool[n, d] sets (PR base commit)",
@@ -561,17 +673,16 @@ def sweep(args):
                 "form is what the megakernel serves in one launch on "
                 "real accelerators",
         "multipass_baseline": MULTIPASS_FLEET_BASELINE,
-        "multipass_live": {"cold_wall_s": round(mp_cold_s, 2),
-                           "warm_wall_s": round(mp_warm_s, 2)},
+        "multipass_live": _timing_record(
+            horizon=horizon, seeds=len(seeds),
+            cold_wall_s=round(mp_cold_s, 2),
+            warm_wall_s=round(mp_warm_s, 2),
+            devices=jax.device_count()),
         "fused_after": packed_now,
         "bit_identical": bool(bit_identical),
         "warm_speedup_live": round(mp_warm_s / max(rerun_s, 1e-9), 2),
-        "comparable_config": (
-            horizon == MULTIPASS_FLEET_BASELINE["horizon"]
-            and len(seeds) == MULTIPASS_FLEET_BASELINE["seeds"]
-            and jax.device_count() == MULTIPASS_FLEET_BASELINE["devices"]
-            and _host_fingerprint()
-            == tuple(MULTIPASS_FLEET_BASELINE["host"])),
+        "comparable_config": _comparable(packed_now,
+                                         MULTIPASS_FLEET_BASELINE),
     }
     if fused_vs_multipass["comparable_config"]:
         fused_vs_multipass["warm_speedup"] = round(
@@ -589,7 +700,13 @@ def sweep(args):
               file=sys.stderr)
         sys.exit(1)
 
-    payload = {
+    # merge into the existing file: each bench owns its keys — a sweep
+    # run must not clobber `figures` / `one_exec_vs_per_fig` records
+    # written by other benches (the PR-6 writer rebuilt the payload and
+    # silently dropped them)
+    path = Path(args.sweep_json_out)
+    payload = _load_json(path)
+    payload.update({
         "meta": {"fig": 7, "horizon": horizon, "seeds": len(seeds),
                  "mpl_grid": list(MPL_GRID),
                  "protocols": list(PROTOCOLS),
@@ -607,7 +724,7 @@ def sweep(args):
         },
         "packed_vs_boolean": packed_vs_boolean,
         "fused_vs_multipass": fused_vs_multipass,
-    }
+    })
     if per_point is not None:
         payload["before_per_point_loop"] = {
             "wall_s": round(before_s, 1),
@@ -621,22 +738,129 @@ def sweep(args):
         payload["parity"] = {
             "mean_rel_commit_diff": round(sum(rel) / len(rel), 4),
             "max_rel_commit_diff": round(max(rel), 4)}
-    path = Path(args.sweep_json_out)
-    existing = _load_json(path)
-    if "figures" in existing:     # keep --full figure records alongside
-        payload["figures"] = existing["figures"]
     path.write_text(json.dumps(payload, indent=2) + "\n")
     _row("sweep_json", 0.0, f"wrote={path}")
 
 
+def one_exec(args):
+    """ONE bucketed executable for the whole figs 5-16 grid vs the
+    per-figure-jit baseline (one fresh fleet compile per figure —
+    exactly what the default figure benches did before ``figs``).
+
+    Per figure, the bucketed grid block must be BIT-IDENTICAL to that
+    figure's own fleet (same commits/aborts/blocks/ops/iters arrays):
+    bucketing pads shapes, it must not change a single draw.  A
+    mismatch exits nonzero.  Cold (trace + compile + run) and warm
+    (executable reuse) walls of both sides land in
+    ``BENCH_sweep.json["one_exec_vs_per_fig"]`` — both sides measured
+    live in this process, so the speedup is always self-comparable.
+    """
+    import json
+    import jax
+    from repro.core import sweep as fleet_sweep
+    from repro.core.types import GRID_FIGS
+
+    horizon = args.horizon or (100_000.0 if args.full else HORIZON)
+    seeds = (0, 1, 2) if args.full else (0, 1)
+
+    # ---- one executable: cold, then warm re-run of the same grid ----
+    t0 = time.time()
+    grid_out, fleet = fleet_sweep.run_grid(GRID_FIGS, MPL_GRID, seeds,
+                                           horizon)
+    one_cold_s = time.time() - t0
+    t0 = time.time()
+    grid_out2, _ = fleet_sweep.run_grid(GRID_FIGS, MPL_GRID, seeds,
+                                        horizon, fleet=fleet)
+    one_warm_s = time.time() - t0
+    _row("one_exec_grid", one_cold_s * 1e6,
+         f"figures={len(GRID_FIGS)} traces={fleet.traces}"
+         f" warm_s={one_warm_s:.1f}")
+
+    # ---- per-figure baseline: fresh fleet (fresh jit) per figure ----
+    # cold/warm per figure, fleet dropped right after: the honest
+    # before-state without holding 12 executables alive at once
+    per_cold_s = per_warm_s = 0.0
+    mismatches = []
+    for fig in GRID_FIGS:
+        t0 = time.time()
+        fig_out, fig_fleet = fleet_sweep.run_fleet(fig, MPL_GRID, seeds,
+                                                   horizon)
+        per_cold_s += time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(fig_fleet(MPL_GRID, seeds))
+        per_warm_s += time.time() - t0
+        ok = all(np.array_equal(grid_out[fig][proto][k],
+                                fig_out[proto][k])
+                 for proto in PROTOCOLS for k in grid_out[fig][proto])
+        if not ok:
+            mismatches.append(fig)
+        del fig_out, fig_fleet
+
+    if mismatches:
+        print(f"ONE-EXEC MISMATCH: figs {mismatches} differ from their "
+              "per-figure fleets", file=sys.stderr)
+        sys.exit(1)
+
+    cold_speedup = round(per_cold_s / max(one_cold_s, 1e-9), 2)
+    warm_speedup = round(per_warm_s / max(one_warm_s, 1e-9), 2)
+    _row("one_exec_vs_per_fig", one_cold_s * 1e6,
+         f"cold_speedup={cold_speedup}x warm_speedup={warm_speedup}x"
+         f" per_fig_cold_s={per_cold_s:.1f} bit_identical=True")
+
+    record = {
+        "what": "figs 5-16 full grid: one bucketed fleet executable "
+                "(sweep.run_grid, static buckets from grid_cover_params)"
+                " vs one fresh fleet jit per figure (the pre-bucketing "
+                "default figure path); per-figure results asserted "
+                "bit-identical before timing is recorded.  The single "
+                "executable's win is COMPILE time (11 of 12 XLA "
+                "compiles eliminated — compile_speedup isolates it); "
+                "its cost is runtime: narrow figures pad to the 16-word "
+                "item bucket and every lane rides the slowest figure's "
+                "iteration count, so warm_speedup < 1 and the cold win "
+                "shrinks as the horizon grows (measured 1.26x cold / "
+                "0.34x warm at horizon 2000 on this host)",
+        "figures": list(GRID_FIGS),
+        "mpl_grid": list(MPL_GRID),
+        "one_executable": _timing_record(
+            horizon=horizon, seeds=len(seeds),
+            cold_wall_s=round(one_cold_s, 2),
+            warm_wall_s=round(one_warm_s, 2),
+            compile_wall_s=round(one_cold_s - one_warm_s, 2),
+            devices=jax.device_count(), n_slots=fleet.n_slots,
+            traces=fleet.traces),
+        "per_figure_jit": _timing_record(
+            horizon=horizon, seeds=len(seeds),
+            cold_wall_s=round(per_cold_s, 2),
+            warm_wall_s=round(per_warm_s, 2),
+            compile_wall_s=round(per_cold_s - per_warm_s, 2),
+            devices=jax.device_count(), compiles=len(GRID_FIGS)),
+        "bit_identical": True,
+        "cold_speedup": cold_speedup,
+        "warm_speedup": warm_speedup,
+        "compile_speedup": round(
+            (per_cold_s - per_warm_s) / max(one_cold_s - one_warm_s,
+                                            1e-9), 2),
+        # both sides measured live in this very process
+        "comparable_config": True,
+    }
+    path = Path(args.sweep_json_out)
+    payload = _load_json(path)
+    payload["one_exec_vs_per_fig"] = record
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    _row("one_exec_json", 0.0, f"wrote={path} key=one_exec_vs_per_fig")
+
+
 BENCHES = dict(FIGS)
 BENCHES.update(
+    figs=figs,
     sched_admit=sched_admit,
     kernel_flash=kernel_flash,
     kernel_conflict=kernel_conflict,
     jaxsim_parity=jaxsim_parity,
     engine=engine,
     sweep=sweep,
+    one_exec=one_exec,
 )
 
 
@@ -679,10 +903,14 @@ def main() -> None:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count="
             f"{args.host_devices}").strip()
-    # `engine` / `sweep` run full grids and rewrite their BENCH json —
-    # opt-in via --only, never part of the default figure run
+    # the default figure path is the single-executable `figs` grid;
+    # per-figure benches (fig5..fig16) stay reachable via --only.
+    # `engine` / `sweep` / `one_exec` run full grids and rewrite their
+    # BENCH json — opt-in via --only, never part of the default run
     names = (args.only.split(",") if args.only
-             else [n for n in BENCHES if n not in ("engine", "sweep")])
+             else [n for n in BENCHES
+                   if n not in ("engine", "sweep", "one_exec")
+                   and n not in FIGS])
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name](args)

@@ -30,9 +30,22 @@ WORD = 32
 _U1 = jnp.uint32(1)
 
 
+def bucket(n: int, quantum: int) -> int:
+    """Round ``n`` up to a positive multiple of ``quantum``.
+
+    THE static-axis quantiser (DESIGN.md §2.4): every padded axis —
+    slot (``sweep.slot_bucket``), item-word (``n_words``), per-txn op
+    list (``jaxsim`` draw bucket) — rounds through here, so nearby
+    configurations land in the same compiled executable.
+    """
+    if quantum <= 0:
+        raise ValueError(f"quantum must be positive, got {quantum}")
+    return max(quantum, quantum * -(-n // quantum))
+
+
 def n_words(d: int) -> int:
     """Words per row for a d-item universe."""
-    return -(-d // WORD)
+    return bucket(d, WORD) // WORD
 
 
 def zeros(n: int, d: int) -> jax.Array:

@@ -41,10 +41,17 @@ a sweep over the production mesh's data axis.
 
 MPL can additionally be a *runtime* parameter (DESIGN.md §2.4): the
 slot axis pads to a static bucket and ``make_padded_engine`` returns
-``run(seed, mpl)`` where only the first ``mpl`` slots ever activate —
-one compiled executable serves every MPL point.  ``repro.core.sweep``
-builds on this to run a whole (protocol × MPL × seed) figure grid as a
-single jitted fleet call, optionally shard_map-ed over the host mesh.
+``run(seed, mpl, rt)`` where only the first ``mpl`` slots ever
+activate — one compiled executable serves every MPL point.  The
+remaining workload axes are runtime values too (``RtParams``: live
+item count below the ``d`` bit bucket, write_prob, txn-length bounds
+below the ``max_ops`` bucket, live resource counts below the pool
+buckets), and the samplers draw at the bucket-invariant ``ops_draw``
+width — so a run inside a wider bucket is bit-identical to its
+exact-shape twin.  ``repro.core.sweep`` builds on this to run a whole
+(protocol × MPL × seed) figure grid — or ALL paper figures at once
+(``run_grid``) — as a single jitted fleet call, optionally
+shard_map-ed over the host (or multi-host pod) mesh.
 Fleet engines (``fleet=True``) drop the quiet-iteration ``lax.cond``
 gates (under vmap they decay to select-both-branches) and draw fresh
 transactions from a pre-sampled pool (``pool > 0``) instead of calling
@@ -68,11 +75,49 @@ from .types import SimParams, SimResult
 
 INF = jnp.float32(1e30)
 
+# Op-axis draw quantum (DESIGN.md §2.4): samplers ALWAYS draw at
+# ``bucket(max_ops, OP_QUANTUM)`` and slice to the engine's op capacity,
+# so engines whose op buckets differ (a mean-8 figure inside the
+# max_ops=20 grid bucket vs its native max_ops=12 trace) consume the
+# SAME PRNG stream — the bucketing bit-identity bar depends on it.  20
+# is the paper grid's largest op list (txn_size 16 + spread 4).
+OP_QUANTUM = 20
+
 # event kinds
 EV_ATTEMPT, EV_DISK_DONE, EV_FLUSH_DONE, EV_TIMEOUT, EV_RESTART = range(5)
 # phases
 PH_READ, PH_BLOCKED, PH_WC_LOCK, PH_WC_PREC, PH_FLUSH, PH_RESTART, PH_OFF \
     = range(7)
+
+
+class RtParams(NamedTuple):
+    """Workload axes that are RUNTIME values, not trace shapes.
+
+    Every field is a traced scalar (int32 / float32) riding the engine
+    state as loop-invariant data, so one compiled executable serves any
+    paper figure whose *shapes* fit the engine's static buckets
+    (``EngCfg.d`` item bits, ``EngCfg.max_ops`` op slots,
+    ``EngCfg.cpus`` / ``EngCfg.disks`` pool entries).  Values must not
+    exceed their buckets: items are sampled below ``d``, ops beyond
+    ``len_hi`` stay ``-1`` pads, and resource entries past
+    ``cpus`` / ``disks`` hold ``free_at = INF`` so FCFS ``argmin`` never
+    picks them.
+    """
+    d: jax.Array            # live item count (<= cfg.d)
+    write_prob: jax.Array   # f32
+    len_lo: jax.Array       # txn length bounds (len_hi <= cfg.max_ops)
+    len_hi: jax.Array
+    cpus: jax.Array         # live pool sizes (<= cfg.cpus / cfg.disks)
+    disks: jax.Array
+
+
+def rt_of(p: SimParams) -> RtParams:
+    """The runtime-axis values of a parameter setting."""
+    return RtParams(
+        d=jnp.int32(p.db_size), write_prob=jnp.float32(p.write_prob),
+        len_lo=jnp.int32(max(2, p.txn_size_mean - p.txn_size_spread)),
+        len_hi=jnp.int32(p.txn_size_mean + p.txn_size_spread),
+        cpus=jnp.int32(p.num_cpus), disks=jnp.int32(p.num_disks))
 
 
 class EngState(NamedTuple):
@@ -98,16 +143,20 @@ class EngState(NamedTuple):
     pool_kinds: jax.Array        # int8[P, L] pre-sampled txn pool (P=0: off)
     pool_items: jax.Array        # int32[P, L]
     pool_next: jax.Array         # int32 next pool row to hand out
+    rt: RtParams                 # runtime workload axes (loop-invariant)
 
 
 @dataclasses.dataclass(frozen=True)
 class EngCfg:
     protocol: str
-    n: int                       # MPL slots
-    d: int                       # db size
-    max_ops: int
-    cpus: int
-    disks: int
+    n: int                       # MPL slots (static bucket)
+    d: int                       # db size (static item-bit bucket; the
+                                 # live item count is rt.d <= d)
+    max_ops: int                 # op-list capacity (static bucket)
+    ops_draw: int                # sampler draw width: bucket(max_ops,
+                                 # OP_QUANTUM) — see OP_QUANTUM
+    cpus: int                    # resource-pool capacities (static
+    disks: int                   # buckets; live sizes are rt.cpus/disks)
     cpu_mean: float
     cpu_spread: float
     io_mean: float
@@ -141,9 +190,11 @@ class EngCfg:
 
 
 def _cfg(p: SimParams, max_iters: int) -> EngCfg:
+    max_ops = p.txn_size_mean + p.txn_size_spread
     return EngCfg(
-        protocol="", n=p.mpl, d=p.db_size, max_ops=p.txn_size_mean
-        + p.txn_size_spread, cpus=p.num_cpus, disks=p.num_disks,
+        protocol="", n=p.mpl, d=p.db_size, max_ops=max_ops,
+        ops_draw=B.bucket(max_ops, OP_QUANTUM),
+        cpus=p.num_cpus, disks=p.num_disks,
         cpu_mean=p.cpu_burst_mean, cpu_spread=p.cpu_burst_spread,
         io_mean=p.io_time_mean, io_spread=p.io_time_spread,
         write_prob=p.write_prob,
@@ -157,25 +208,34 @@ def _cfg(p: SimParams, max_iters: int) -> EngCfg:
 # workload sampling (in-kernel)
 # --------------------------------------------------------------------------
 
-def sample_txn(key: jax.Array, cfg: EngCfg) -> Tuple[jax.Array, jax.Array]:
-    """One transaction: (kinds int8[L], items int32[L]); -1 pads."""
+def sample_txn(key: jax.Array, cfg: EngCfg, rt: RtParams
+               ) -> Tuple[jax.Array, jax.Array]:
+    """One transaction: (kinds int8[L], items int32[L]); -1 pads.
+
+    Workload bounds (``rt.len_lo/len_hi``, ``rt.write_prob``, ``rt.d``)
+    are runtime scalars, and all draws use the ``cfg.ops_draw`` width
+    (never ``cfg.max_ops``) so the PRNG stream is invariant to the op
+    bucket — a figure run inside a wider bucket samples the exact same
+    transactions (see OP_QUANTUM).
+    """
+    D = cfg.ops_draw
     kl, kw, ki = jax.random.split(key, 3)
-    length = jax.random.randint(kl, (), cfg.len_lo, cfg.len_hi + 1)
-    want_w = jax.random.uniform(kw, (cfg.max_ops,)) < cfg.write_prob
-    keys = jax.random.split(ki, cfg.max_ops)
+    length = jax.random.randint(kl, (), rt.len_lo, rt.len_hi + 1)
+    want_w = jax.random.uniform(kw, (D,)) < rt.write_prob
+    keys = jax.random.split(ki, D)
 
     def slot(carry, inp):
         read_items, n_read, written = carry
         j, kk, ww = inp
         k1, k2 = jax.random.split(kk)
-        avail = (jnp.arange(cfg.max_ops) < n_read) & ~written
+        avail = (jnp.arange(D) < n_read) & ~written
         n_avail = avail.sum()
         do_write = ww & (n_avail > 0)
         # pick a random available read slot (guard all-masked case)
         logits = jnp.where(avail | (n_avail == 0), 0.0, -jnp.inf)
         wpick = jax.random.categorical(k1, logits)
         item_w = read_items[wpick]
-        item_r = jax.random.randint(k2, (), 0, cfg.d)
+        item_r = jax.random.randint(k2, (), 0, rt.d)
         item = jnp.where(do_write, item_w, item_r)
         kind = jnp.where(do_write, 1, 0).astype(jnp.int8)
         kind = jnp.where(j < length, kind, jnp.int8(-1))
@@ -186,27 +246,29 @@ def sample_txn(key: jax.Array, cfg: EngCfg) -> Tuple[jax.Array, jax.Array]:
                                 written.at[wpick].set(True), written)
         return (new_read, new_n, new_written), (kind, item)
 
-    init = (jnp.zeros(cfg.max_ops, jnp.int32), jnp.int32(0),
-            jnp.zeros(cfg.max_ops, bool))
+    init = (jnp.zeros(D, jnp.int32), jnp.int32(0), jnp.zeros(D, bool))
     _, (kinds, items) = jax.lax.scan(
-        slot, init, (jnp.arange(cfg.max_ops), keys, want_w))
-    return kinds, items.astype(jnp.int32)
+        slot, init, (jnp.arange(D), keys, want_w))
+    # ops beyond max_ops are always pads (length <= len_hi <= max_ops)
+    return kinds[:cfg.max_ops], items[:cfg.max_ops].astype(jnp.int32)
 
 
-def sample_txns(key: jax.Array, cfg: EngCfg, n: int
+def sample_txns(key: jax.Array, cfg: EngCfg, rt: RtParams, n: int
                 ) -> Tuple[jax.Array, jax.Array]:
     """n transactions at once: (kinds int8[n, L], items int32[n, L]).
 
     Same model as ``sample_txn`` — writes target a uniformly-random
     previously-read, not-yet-written item — but all PRNG draws are
     hoisted out of the per-op scan (threefry per scan step is the cost
-    that made per-commit resampling dominate the cohort engine).
+    that made per-commit resampling dominate the cohort engine).  Draws
+    run at the bucket-invariant ``cfg.ops_draw`` width and slice to the
+    engine's op capacity, like ``sample_txn``.
     """
-    L = cfg.max_ops
+    L = cfg.ops_draw
     kl, kw, kp, kr = jax.random.split(key, 4)
-    length = jax.random.randint(kl, (n,), cfg.len_lo, cfg.len_hi + 1)
-    want_w = jax.random.uniform(kw, (n, L)) < cfg.write_prob
-    read_cand = jax.random.randint(kr, (n, L), 0, cfg.d)
+    length = jax.random.randint(kl, (n,), rt.len_lo, rt.len_hi + 1)
+    want_w = jax.random.uniform(kw, (n, L)) < rt.write_prob
+    read_cand = jax.random.randint(kr, (n, L), 0, rt.d)
     pick_u = jax.random.uniform(kp, (n, L))
 
     rows = jnp.arange(n)
@@ -241,7 +303,8 @@ def sample_txns(key: jax.Array, cfg: EngCfg, n: int
             jnp.zeros((n, L), bool))
     _, (kinds, items) = jax.lax.scan(
         slot, init, (jnp.arange(L), want_w.T, read_cand.T, pick_u.T))
-    return jnp.moveaxis(kinds, 0, 1), jnp.moveaxis(items, 0, 1)
+    return (jnp.moveaxis(kinds, 0, 1)[:, :cfg.max_ops],
+            jnp.moveaxis(items, 0, 1)[:, :cfg.max_ops])
 
 
 def _uniform(key, mean, spread):
@@ -333,7 +396,7 @@ def _wake_waiters(s: EngState) -> EngState:
 def _begin_txn(cfg: EngCfg, s: EngState, i, fresh: jax.Array) -> EngState:
     """(Re)start slot i: fresh -> sample new ops; else reuse (restart)."""
     key, k1, k2 = jax.random.split(s.key, 3)
-    kinds_i, items_i = sample_txn(k1, cfg)
+    kinds_i, items_i = sample_txn(k1, cfg, s.rt)
     new_kinds = jnp.where(fresh, kinds_i, s.kinds[i])
     new_items = jnp.where(fresh, items_i, s.items[i])
     s = s._replace(
@@ -804,7 +867,7 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
     # fresh workloads are only needed on commit iterations — gate the
     # (vmapped) sampling behind a cond so quiet iterations skip it
     def do_sample(k):
-        return sample_txns(k, cfg, n)
+        return sample_txns(k, cfg, s.rt, n)
 
     def no_sample(k):
         return (jnp.full((n, cfg.max_ops), -1, jnp.int8),
@@ -946,11 +1009,14 @@ def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
     """An engine whose MPL is a RUNTIME parameter (DESIGN.md §2.4).
 
     The slot axis is padded to the static bucket ``n_slots``; the
-    returned ``run(seed, mpl)`` activates only the first ``mpl`` lanes
-    (``mpl`` is a traced int32, so one compiled executable serves every
-    MPL point up to the bucket).  Padded slots start inactive with
-    ``next_time = INF`` and are never begun, so every masked primitive
-    leaves them inert.
+    returned ``run(seed, mpl, rt=None)`` activates only the first
+    ``mpl`` lanes (``mpl`` is a traced int32, so one compiled
+    executable serves every MPL point up to the bucket).  Padded slots
+    start inactive with ``next_time = INF`` and are never begun, so
+    every masked primitive leaves them inert.  ``rt`` overrides the
+    runtime workload axes (item count, write_prob, txn-length bounds,
+    resource-pool sizes) — the remaining static axes of ``p`` are then
+    just buckets those values must fit inside (``check_rt``).
     """
     init, cond, step = engine_parts(p, protocol, max_iters=max_iters,
                                     step_mode=step_mode,
@@ -959,18 +1025,45 @@ def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
                                     order=order)
 
     @jax.jit
-    def _run(seed: jax.Array, mpl: jax.Array) -> EngState:
-        return jax.lax.while_loop(cond, step, init(seed, mpl))
+    def _run(seed: jax.Array, mpl: jax.Array, rt: RtParams) -> EngState:
+        return jax.lax.while_loop(cond, step, init(seed, mpl, rt))
 
-    def run(seed, mpl) -> EngState:
+    def run(seed, mpl, rt: RtParams = None) -> EngState:
         # only the first n_slots lanes exist — a larger mpl would be
         # silently clamped by init's fori_loop, mislabeling the result
         if not isinstance(mpl, jax.core.Tracer) and int(mpl) > n_slots:
             raise ValueError(f"mpl={int(mpl)} > n_slots={n_slots}")
-        return _run(seed, mpl)
+        if rt is None:
+            rt = rt_of(p)
+        else:
+            check_rt(p, rt)
+        return _run(seed, mpl, rt)
 
     run._cache_size = _run._cache_size
     return run
+
+
+def check_rt(p: SimParams, rt: RtParams) -> None:
+    """Reject runtime values that overflow their static buckets.
+
+    Only applied to concrete (non-traced) values — inside a trace the
+    caller owns the invariant.  Overflow would be *silent* otherwise:
+    items >= d would scatter into pad bits (breaking the zero-pad-bit
+    invariant), ops past ``max_ops`` would be dropped by the sampler
+    slice, and resource entries past the bucket do not exist.
+    """
+    bounds = (("d", rt.d, p.db_size),
+              ("len_hi", rt.len_hi,
+               p.txn_size_mean + p.txn_size_spread),
+              ("cpus", rt.cpus, p.num_cpus),
+              ("disks", rt.disks, p.num_disks))
+    for name, val, cap in bounds:
+        if isinstance(val, jax.core.Tracer):
+            continue
+        hi = int(jnp.max(jnp.asarray(val)))
+        if hi > cap:
+            raise ValueError(
+                f"rt.{name}={hi} exceeds its static bucket {cap}")
 
 
 def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
@@ -1003,17 +1096,24 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
                               fleet=fleet, pool=pool, fused=fused,
                               order=order, megakernel=megakernel)
 
-    def init(seed, mpl=None) -> EngState:
+    def init(seed, mpl=None, rt: RtParams = None) -> EngState:
         if mpl is None:
             mpl = p.mpl
+        if rt is None:
+            rt = rt_of(p)
         mpl = jnp.asarray(mpl, jnp.int32)
         key = jax.random.PRNGKey(seed)
         if cfg.pool:
             key, kp = jax.random.split(key)
-            pool_kinds, pool_items = sample_txns(kp, cfg, cfg.pool)
+            pool_kinds, pool_items = sample_txns(kp, cfg, rt, cfg.pool)
         else:
             pool_kinds = jnp.zeros((0, cfg.max_ops), jnp.int8)
             pool_items = jnp.zeros((0, cfg.max_ops), jnp.int32)
+        # resource-pool entries past the live size hold free_at = INF:
+        # FCFS argmin never picks them while a live server exists, so a
+        # bucketed pool is bit-identical to its exact-size twin
+        live = jnp.where(jnp.arange(cfg.cpus) < rt.cpus, 0.0, INF)
+        live_d = jnp.where(jnp.arange(cfg.disks) < rt.disks, 0.0, INF)
         s = EngState(
             now=jnp.float32(0.0), key=key,
             pstate=P.init_state(cfg.n, cfg.d),
@@ -1026,13 +1126,13 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
             next_kind=jnp.zeros(cfg.n, jnp.int8),
             deadline=jnp.zeros(cfg.n, jnp.float32),
             flush_left=jnp.zeros(cfg.n, jnp.int32),
-            cpu_free=jnp.zeros(cfg.cpus, jnp.float32),
-            disk_free=jnp.zeros(cfg.disks, jnp.float32),
+            cpu_free=live.astype(jnp.float32),
+            disk_free=live_d.astype(jnp.float32),
             commits=jnp.int32(0), aborts=jnp.int32(0),
             blocks=jnp.int32(0), ops_done=jnp.int32(0),
             iters=jnp.int32(0),
             pool_kinds=pool_kinds, pool_items=pool_items,
-            pool_next=jnp.int32(0))
+            pool_next=jnp.int32(0), rt=rt)
         # begin only the first `mpl` slots; the rest stay PH_OFF/INF so
         # every cohort mask derived from `ready` leaves them inert
         return jax.lax.fori_loop(

@@ -1,4 +1,4 @@
-"""Padded-lane fleet sweeps: one compiled executable for a paper grid.
+"""Padded-lane fleet sweeps: one compiled executable for the paper grid.
 
 The figure harness needs the full (protocol × MPL × seed) grid of
 Table 1 (DESIGN.md §2.4).  Run per point, every point pays a fresh
@@ -12,6 +12,16 @@ shape.  Here the slot axis is padded to a static bucket
 * the (MPL × seed) lanes of each protocol ``vmap`` into one SPMD
   computation whose ``lax.while_loop`` runs while ANY lane is active
   (the batching rule freezes finished lanes via select).
+
+The remaining workload axes are runtime scalars too
+(``jaxsim.RtParams``: item count, write_prob, txn-length bounds,
+resource-pool sizes), carried per lane — so lanes of DIFFERENT paper
+figures ride the same executable as long as their shapes fit the
+fleet's static buckets.  ``run_grid`` runs figs 5–16 as one launch this
+way: the item axis pads to the ``db_size=500`` word bucket (pad bits
+invariantly zero, §1.1), op lists to the ``max_ops=20`` bucket (pad
+ops stay ``-1``), resource pools to 16/32 (``free_at=INF`` beyond the
+live size) — each figure's lanes bit-identical to a per-figure fleet.
 
 Protocol selection is a trace-time branch in the engine
 (``EngCfg.protocol``), so the fleet stacks one vmapped sub-sweep per
@@ -31,18 +41,23 @@ Multi-device hosts shard the lane axis over the standard
 ``("data", "model")`` mesh (``repro.parallel.sharding.host_mesh``) via
 ``shard_map``: every device then runs its lane shard's while_loop
 independently — lanes on different devices are not even in lockstep.
+Multi-host runs extend the mesh with a leading pod axis
+(``sharding.pod_mesh`` after ``sharding.init_distributed``); lanes
+then shard over ``("pod", "data")`` — hosts first, local devices
+second.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import bitset as B
 from . import jaxsim
-from .types import SimParams, paper_figure_params
+from .types import (GRID_FIGS, SimParams, grid_cover_params,
+                    paper_figure_params)
 
 PROTOCOLS = ("ppcc", "2pl", "occ")
 METRICS = ("commits", "aborts", "blocks", "ops_done", "iters")
@@ -50,14 +65,35 @@ METRICS = ("commits", "aborts", "blocks", "ops_done", "iters")
 
 def slot_bucket(max_mpl: int, quantum: int = 32) -> int:
     """Pad the slot axis to a multiple of ``quantum`` so nearby grids
-    (e.g. adding MPL=120 to the paper grid) hit the same executable."""
-    return max(quantum, quantum * math.ceil(max_mpl / quantum))
+    (e.g. adding MPL=120 to the paper grid) hit the same executable.
+    Same quantiser as the item-word and op axes (``bitset.bucket``)."""
+    return B.bucket(max_mpl, quantum)
 
 
-def fleet_mesh(n_lanes: int):
-    """Largest ``host_mesh`` whose data axis divides ``n_lanes``
-    (shard_map needs an even lane split); None on single-device hosts."""
-    from ..parallel.sharding import host_mesh
+def fleet_mesh(n_lanes: int, pods: Optional[bool] = None):
+    """Largest mesh whose lane axes divide ``n_lanes`` (shard_map needs
+    an even lane split); None on single-device hosts.
+
+    Single-process: the ``("data", "model")`` host mesh.  Multi-process
+    (``jax.process_count() > 1``, after ``sharding.init_distributed``)
+    — or ``pods=True`` to force the pod-axis path single-process — the
+    ``("pod", "data", "model")`` mesh; lanes then shard over
+    ``("pod", "data")``.
+    """
+    from ..parallel.sharding import host_mesh, pod_mesh
+    if pods is None:
+        pods = jax.process_count() > 1
+    if pods:
+        mesh = pod_mesh(n_data=1)
+        if mesh is None:
+            return None
+        n_pods = mesh.shape["pod"]
+        if n_lanes % n_pods:
+            return None         # lanes must split evenly across hosts
+        nd = len(jax.devices()) // n_pods
+        while nd > 1 and n_lanes % (n_pods * nd):
+            nd -= 1
+        return pod_mesh(nd)
     mesh = host_mesh()
     if mesh is None:
         return None
@@ -75,6 +111,12 @@ class Fleet:
     MPL and seed are runtime values: any grid of the same (M, S) shape
     with ``max(mpls) <= n_slots`` reuses the executable (``traces``
     stays at 1).
+
+    ``run_lanes(seeds, mpls, rts)`` is the general form: flat lane
+    vectors plus per-lane ``jaxsim.RtParams``, so lanes of different
+    paper figures share the executable (``run_grid`` builds the
+    figs 5–16 grid this way).  ``p`` then only fixes the static
+    buckets every lane's values must fit inside.
 
     ``fused=False`` runs the ppcc lanes through the legacy multipass
     cohort chain instead of ``ppcc.cohort_step_fused`` — bit-identical
@@ -110,42 +152,60 @@ class Fleet:
         def lane_runner(proto: str):
             init, cond, step = parts[proto]
 
-            def run_one(seed, mpl):
-                return jax.lax.while_loop(cond, step, init(seed, mpl))
+            def run_one(seed, mpl, rt):
+                return jax.lax.while_loop(cond, step,
+                                          init(seed, mpl, rt))
 
             runner = jax.vmap(run_one)
             if mesh is not None:
                 from jax.experimental.shard_map import shard_map
                 from jax.sharding import PartitionSpec as P
+                from ..parallel.sharding import data_axes
+                lane = P(data_axes(mesh))
                 runner = shard_map(
-                    runner, mesh=mesh, in_specs=(P("data"), P("data")),
-                    out_specs=P("data"), check_rep=False)
+                    runner, mesh=mesh, in_specs=(lane, lane, lane),
+                    out_specs=lane, check_rep=False)
             return runner
 
         runners = {proto: lane_runner(proto) for proto in self.protocols}
 
-        def fleet_fn(mpls, seeds):
+        def fleet_fn(seed_l, mpl_l, rt_l):
             self.traces += 1          # python side effect: counts traces
-            m, s = mpls.shape[0], seeds.shape[0]
-            mpl_l = jnp.repeat(mpls, s)
-            seed_l = jnp.tile(seeds, m)
             out = {}
             for proto in self.protocols:
-                fin = runners[proto](seed_l, mpl_l)
-                res = {k: getattr(fin, k).reshape(m, s) for k in METRICS}
-                res["now"] = fin.now.reshape(m, s)
+                fin = runners[proto](seed_l, mpl_l, rt_l)
+                res = {k: getattr(fin, k) for k in METRICS}
+                res["now"] = fin.now
                 out[proto] = res
             return out
 
         self._jit = jax.jit(fleet_fn)
 
-    def __call__(self, mpls, seeds):
-        mpls = jnp.asarray(mpls, jnp.int32)
+    def run_lanes(self, seeds, mpls, rts: jaxsim.RtParams):
+        """Run flat lane vectors: ``{protocol: {metric: array[L]}}``.
+
+        ``rts`` leaves are per-lane ``[L]`` vectors; every lane's
+        values must fit the fleet's static buckets (``check_rt``).
+        Same lane count -> same executable (``traces`` proves it).
+        """
         seeds = jnp.asarray(seeds, jnp.int32)
+        mpls = jnp.asarray(mpls, jnp.int32)
         if int(mpls.max()) > self.n_slots:
             raise ValueError(
-                f"max(mpls)={int(mpls.max())} exceeds n_slots={self.n_slots}")
-        return self._jit(mpls, seeds)
+                f"max(mpls)={int(mpls.max())} exceeds "
+                f"n_slots={self.n_slots}")
+        jaxsim.check_rt(self.params, rts)
+        return self._jit(seeds, mpls, rts)
+
+    def __call__(self, mpls, seeds):
+        mpls = np.asarray(mpls, np.int32)
+        seeds = np.asarray(seeds, np.int32)
+        m, s = mpls.shape[0], seeds.shape[0]
+        rt = jaxsim.rt_of(self.params)
+        rts = jax.tree.map(lambda x: jnp.broadcast_to(x, (m * s,)), rt)
+        flat = self.run_lanes(np.tile(seeds, m), np.repeat(mpls, s), rts)
+        return {proto: {k: v.reshape(m, s) for k, v in res.items()}
+                for proto, res in flat.items()}
 
 
 def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
@@ -169,3 +229,60 @@ def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
     out = fleet(list(mpl_grid), list(seeds))
     host = jax.tree.map(np.asarray, out)
     return host, fleet
+
+
+def grid_lanes(figs: Sequence[int], mpl_grid: Sequence[int],
+               seeds: Sequence[int]
+               ) -> Tuple[jax.Array, jax.Array, jaxsim.RtParams]:
+    """Flat (seed, mpl, rt) lane vectors for a figure × MPL × seed
+    grid, figure-major (lane ``f*M*S + m*S + s`` is figure ``figs[f]``
+    at ``mpl_grid[m]``, ``seeds[s]`` — reshape to ``[F, M, S]``)."""
+    m, s = len(mpl_grid), len(seeds)
+    rts = [jaxsim.rt_of(paper_figure_params(f)) for f in figs]
+    rt_l = jax.tree.map(
+        lambda *xs: jnp.repeat(jnp.stack(xs), m * s), *rts)
+    mpl_l = jnp.tile(jnp.repeat(jnp.asarray(mpl_grid, jnp.int32), s),
+                     len(figs))
+    seed_l = jnp.tile(jnp.asarray(seeds, jnp.int32), len(figs) * m)
+    return seed_l, mpl_l, rt_l
+
+
+def run_grid(figs: Sequence[int] = GRID_FIGS,
+             mpl_grid: Sequence[int] = (5, 10, 25, 50, 75, 100, 150),
+             seeds: Sequence[int] = (0, 1), horizon: float = 20_000.0,
+             protocols: Sequence[str] = PROTOCOLS,
+             n_slots: Optional[int] = None, max_iters: int = 400_000,
+             shard: bool = True, fused: bool = True,
+             fleet: Optional[Fleet] = None,
+             ) -> Tuple[Dict[int, Dict[str, Dict[str, np.ndarray]]],
+                        Fleet]:
+    """EVERY paper figure's grid in one compiled fleet launch.
+
+    The fleet's static buckets cover all the figures
+    (``grid_cover_params``: 500-item words, 20-op lists, 16/32
+    resource pools); each figure contributes (MPL × seed) lanes whose
+    per-lane ``RtParams`` carry its live values.  Returns
+    ``({fig: {protocol: {metric: np.ndarray[M, S]}}}, fleet)`` — each
+    figure's block bit-identical to ``run_fleet(fig, ...)`` at the
+    same horizon.  Pass ``fleet`` (from a prior call with the same
+    lane count) to reuse the executable.
+    """
+    figs = tuple(figs)
+    n_lanes = len(figs) * len(mpl_grid) * len(seeds)
+    if fleet is None:
+        cover = grid_cover_params(figs).with_(horizon=horizon)
+        if n_slots is None:
+            n_slots = slot_bucket(max(mpl_grid))
+        mesh = fleet_mesh(n_lanes) if shard else None
+        fleet = Fleet(cover, protocols=protocols, n_slots=n_slots,
+                      max_iters=max_iters, mesh=mesh, fused=fused)
+    seed_l, mpl_l, rt_l = grid_lanes(figs, mpl_grid, seeds)
+    flat = fleet.run_lanes(seed_l, mpl_l, rt_l)
+    shape = (len(figs), len(mpl_grid), len(seeds))
+    out = {
+        fig: {proto: {k: np.asarray(v).reshape(shape)[i]
+                      for k, v in res.items()}
+              for proto, res in flat.items()}
+        for i, fig in enumerate(figs)
+    }
+    return out, fleet

@@ -64,13 +64,22 @@ def restart_delay(rng: np.random.Generator, p: SimParams) -> float:
 
 
 def sample_txn_tensor(
-    rng: np.random.Generator, p: SimParams, max_ops: int
+    rng: np.random.Generator, p: SimParams, max_ops: int,
+    quantum: int = None,
 ) -> "tuple[np.ndarray, np.ndarray, int]":
     """Tensorised transaction for the JAX engine.
 
-    Returns (kinds[max_ops] int8, items[max_ops] int32, length).  Slots
-    past `length` are padded with kind=-1.
+    Returns (kinds[W] int8, items[W] int32, length) with ``W = max_ops``,
+    or ``max_ops`` rounded up to ``quantum`` (``bitset.bucket``, the
+    same quantiser as the slot/item-word/op axes, DESIGN.md §2.4) so
+    host-side batches drop straight into grid-bucket-shaped arrays.
+    Slots past `length` are padded with kind=-1 — the engine's inert-op
+    convention, so pad width never changes results.
     """
+    if quantum is not None:
+        # local import: this module stays importable without jax
+        from .bitset import bucket
+        max_ops = bucket(max_ops, quantum)
     ops = sample_txn_ops(rng, p)
     kinds = np.full((max_ops,), -1, np.int8)
     items = np.zeros((max_ops,), np.int32)
@@ -82,14 +91,18 @@ def sample_txn_tensor(
 
 
 def workload_batch(
-    seed: int, p: SimParams, n_txns: int, max_ops: int
+    seed: int, p: SimParams, n_txns: int, max_ops: int,
+    quantum: int = None,
 ) -> "tuple[np.ndarray, np.ndarray, np.ndarray]":
-    """A batch of tensorised transactions: kinds[N,max_ops], items[N,max_ops],
-    lengths[N]."""
+    """A batch of tensorised transactions: kinds[N,W], items[N,W],
+    lengths[N] (``W`` as in ``sample_txn_tensor``)."""
     rng = np.random.default_rng(seed)
-    kinds = np.empty((n_txns, max_ops), np.int8)
-    items = np.empty((n_txns, max_ops), np.int32)
+    k0, i0, n0 = sample_txn_tensor(rng, p, max_ops, quantum)
+    kinds = np.empty((n_txns,) + k0.shape, np.int8)
+    items = np.empty((n_txns,) + i0.shape, np.int32)
     lens = np.empty((n_txns,), np.int32)
-    for t in range(n_txns):
-        kinds[t], items[t], lens[t] = sample_txn_tensor(rng, p, max_ops)
+    kinds[0], items[0], lens[0] = k0, i0, n0
+    for t in range(1, n_txns):
+        kinds[t], items[t], lens[t] = sample_txn_tensor(rng, p, max_ops,
+                                                        quantum)
     return kinds, items, lens

@@ -21,9 +21,15 @@ kernel (``repro.kernels.conflict``); the O(n^2) pair scan is the
 scheduler hot spot at thousands of concurrent actors.
 
 Set inputs may be boolean ``bool[n, d]`` masks *or* already-packed
-``uint32[n, ceil(d/32)]`` words (``repro.core.bitset.pack``) — callers
-that keep packed state hand it straight to the kernel with no re-pack
-per tick.
+``uint32[n, W]`` words (``repro.core.bitset.pack``) — callers that
+keep packed state hand it straight to the kernel with no re-pack per
+tick.  ``W`` may exceed ``ceil(d/32)``: wider rows are simply
+zero-padded words (the §1.1 invariant), so state kept at a static
+word *bucket* (e.g. the 500-item fleet bucket while only 100 items
+are live) flows through unchanged.  ``tick(..., words=...)`` pads
+boolean inputs to such a bucket at pack time — ticks of
+different-sized workloads then share one jitted executable, the same
+static-axis bucketing story as ``core.sweep`` (DESIGN.md §2.4).
 """
 from __future__ import annotations
 
@@ -37,11 +43,24 @@ from ..core import bitset, ppcc
 from ..kernels import ops as kops
 
 
-def _as_bits(sets: jax.Array) -> jax.Array:
-    """Accept bool[n, d] or pre-packed uint32[n, W] set rows."""
-    if sets.dtype == jnp.uint32:
-        return sets
-    return bitset.pack(sets)
+def _as_bits(sets: jax.Array, words: int = None) -> jax.Array:
+    """Accept bool[n, d] or pre-packed uint32[n, W] set rows.
+
+    ``words`` pads the packed rows to a static word bucket (pad words
+    are zero, so every word-wise relation below is exact) — the jit
+    cache keys on the padded shape, so workloads of different ``d``
+    share one compiled tick.
+    """
+    bits = sets if sets.dtype == jnp.uint32 else bitset.pack(sets)
+    if words is not None:
+        have = bits.shape[-1]
+        if words < have:
+            raise ValueError(
+                f"words={words} below the input's {have} packed words")
+        if words > have:
+            bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1)
+                           + [(0, words - have)])
+    return bits
 
 
 class TickResult(NamedTuple):
@@ -67,7 +86,7 @@ def _conflict_matrices(read_bits: jax.Array, write_bits: jax.Array,
 
 def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
               valid: jax.Array, use_kernel: bool = True,
-              order: str = "priority") -> TickResult:
+              order: str = "priority", words: int = None) -> TickResult:
     """Admit a batch of single-shot transactions under PPCC.
 
     read_sets/write_sets: bool[n, d]; valid: bool[n].  Each transaction
@@ -93,8 +112,8 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
     larger batches under contention at the cost of strict priority.
     """
     n = read_sets.shape[0]
-    rb = _as_bits(read_sets)
-    wb = _as_bits(write_sets)
+    rb = _as_bits(read_sets, words)
+    wb = _as_bits(write_sets, words)
     if order == "degree":
         # total involvement = RAW out-degree + WAR in-degree (the
         # kernel's column-sum output) + WW degree; kernel degrees
@@ -150,11 +169,12 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
 
 
 def twopl_tick(read_sets: jax.Array, write_sets: jax.Array,
-               valid: jax.Array, use_kernel: bool = True) -> TickResult:
+               valid: jax.Array, use_kernel: bool = True,
+               words: int = None) -> TickResult:
     """Conservative baseline: admit a prefix-greedy conflict-free set."""
     n = read_sets.shape[0]
-    rb = _as_bits(read_sets)
-    wb = _as_bits(write_sets)
+    rb = _as_bits(read_sets, words)
+    wb = _as_bits(write_sets, words)
     raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
     conflict = raw | raw.T | ww            # any lock conflict
     conflict = conflict & ~jnp.eye(n, dtype=bool)
@@ -172,13 +192,14 @@ def twopl_tick(read_sets: jax.Array, write_sets: jax.Array,
 
 
 def occ_tick(read_sets: jax.Array, write_sets: jax.Array,
-             valid: jax.Array, use_kernel: bool = True) -> TickResult:
+             valid: jax.Array, use_kernel: bool = True,
+             words: int = None) -> TickResult:
     """Optimistic baseline: all run; backward validation in priority
     order — abort if an earlier-priority survivor wrote what you read
     (or wrote)."""
     n = read_sets.shape[0]
-    rb = _as_bits(read_sets)
-    wb = _as_bits(write_sets)
+    rb = _as_bits(read_sets, words)
+    wb = _as_bits(write_sets, words)
     raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
     bad = raw | ww                          # i conflicts with j's writes
 
@@ -200,12 +221,14 @@ def occ_tick(read_sets: jax.Array, write_sets: jax.Array,
 POLICIES = {"ppcc": ppcc_tick, "2pl": twopl_tick, "occ": occ_tick}
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "order"))
+@functools.partial(jax.jit, static_argnames=("policy", "order", "words"))
 def tick(read_sets: jax.Array, write_sets: jax.Array, valid: jax.Array,
-         policy: str = "ppcc", order: str = "priority") -> TickResult:
+         policy: str = "ppcc", order: str = "priority",
+         words: int = None) -> TickResult:
     if policy == "ppcc":
-        return ppcc_tick(read_sets, write_sets, valid, order=order)
+        return ppcc_tick(read_sets, write_sets, valid, order=order,
+                         words=words)
     if order != "priority":
         raise ValueError(
             f"order={order!r} is only supported for policy='ppcc'")
-    return POLICIES[policy](read_sets, write_sets, valid)
+    return POLICIES[policy](read_sets, write_sets, valid, words=words)

@@ -152,6 +152,53 @@ print("SHARD_OK", np.asarray(a["ppcc"]["commits"]).tolist())
 """
 
 
+_POD_SCRIPT = r"""
+import jax
+from repro.parallel import sharding
+ok = sharding.init_distributed(coordinator_address="localhost:12397",
+                               num_processes=1, process_id=0)
+assert ok and jax.process_count() == 1
+assert not sharding.init_distributed()        # second call: no-op
+mesh = sharding.pod_mesh(n_data=4)
+assert mesh is not None, "pod mesh absent after init_distributed"
+assert dict(mesh.shape) == {"pod": 1, "data": 4, "model": 1}, mesh
+assert sharding.data_axes(mesh) == ("pod", "data")
+from repro.core import sweep
+from repro.core.types import paper_figure_params
+m2 = sweep.fleet_mesh(8, pods=True)
+assert m2 is not None and "pod" in m2.axis_names, m2
+p = paper_figure_params(7).with_(horizon=400.0, mpl=5)
+sharded = sweep.Fleet(p, protocols=("ppcc",), n_slots=8, mesh=m2,
+                      max_iters=50)
+plain = sweep.Fleet(p, protocols=("ppcc",), n_slots=8, max_iters=50)
+import numpy as np
+a = sharded((3, 5), (0, 1, 2, 3))
+b = plain((3, 5), (0, 1, 2, 3))
+np.testing.assert_array_equal(np.asarray(a["ppcc"]["commits"]),
+                              np.asarray(b["ppcc"]["commits"]))
+print("POD_OK")
+"""
+
+
+def test_fleet_pod_mesh_single_process_smoke():
+    """The multi-host path, single-process: jax.distributed up, the
+    ("pod", "data", "model") mesh built, lanes sharded over
+    ("pod", "data") — results identical to the unsharded fleet.  Real
+    multi-host needs >1 host; this pins the wiring so a pod run only
+    differs by process count."""
+    import os
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", _POD_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env=env, cwd=str(__import__("pathlib").Path(
+                           __file__).resolve().parents[1]))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "POD_OK" in r.stdout
+
+
 def test_fleet_shard_map_over_host_mesh():
     """shard_map over the ("data", "model") mesh splits lanes across
     devices without changing results.  Forced host devices require a
