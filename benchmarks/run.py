@@ -201,12 +201,13 @@ def _figure_report(fig: int, out_fig: dict, horizon: float, wall: float):
 
 
 def run_figure(fig: int, horizon: float, seeds=SEEDS, mpl_grid=MPL_GRID,
-               oracle: bool = False):
+               oracle: bool = False, delta: bool = False):
     """One figure's grid through the padded-lane fleet (one executable)."""
     from repro.core import sweep as fleet_sweep
 
     t0 = time.time()
-    out, _fleet = fleet_sweep.run_fleet(fig, mpl_grid, seeds, horizon)
+    out, _fleet = fleet_sweep.run_fleet(fig, mpl_grid, seeds, horizon,
+                                        delta=delta)
     wall = (time.time() - t0) * 1e6
     peaks, curves = _figure_report(fig, out, horizon, wall)
     if oracle:
@@ -310,7 +311,7 @@ def make_fig_fn(fig: int):
         horizon = args.horizon or (100_000.0 if args.full else HORIZON)
         seeds = (0, 1, 2) if args.full else SEEDS
         peaks, curves = run_figure(fig, horizon, seeds=seeds,
-                                   oracle=args.oracle)
+                                   oracle=args.oracle, delta=args.delta)
         deltas = _check_peak_drift(fig, peaks, horizon, args.full,
                                    args.peak_tol)
         if args.full and horizon >= 100_000.0:
@@ -341,12 +342,14 @@ def figs(args):
     horizon = args.horizon or (100_000.0 if args.full else HORIZON)
     seeds = (0, 1, 2) if args.full else SEEDS
     t0 = time.time()
-    out, fleet = fleet_sweep.run_grid(GRID_FIGS, MPL_GRID, seeds, horizon)
+    out, fleet = fleet_sweep.run_grid(GRID_FIGS, MPL_GRID, seeds, horizon,
+                                      delta=args.delta)
     wall = (time.time() - t0) * 1e6
     lanes = len(GRID_FIGS) * len(MPL_GRID) * len(seeds)
     _row("figs_grid_fleet", wall,
          f"figures={len(GRID_FIGS)} lanes={lanes}"
-         f" traces={fleet.traces} n_slots={fleet.n_slots}")
+         f" traces={fleet.traces} n_slots={fleet.n_slots}"
+         f" delta={args.delta}")
     for fig in GRID_FIGS:
         peaks, curves = _figure_report(fig, out[fig], horizon, wall)
         deltas = _check_peak_drift(fig, peaks, horizon, args.full,
@@ -546,6 +549,52 @@ def engine(args):
     _row("engine_json", 0.0, f"wrote={path}")
 
 
+def _dirty_occupancy(iters: int = 300):
+    """Measured per-quantum dirty-row counts at the fig7 peak-contention
+    point (mpl=150) — the data behind the ``delta_k`` bucket default
+    (``bitset.bucket(n_slots // 4, 8)``): the engine steps python-level
+    and ``ppcc.dirty_slots`` is evaluated between consecutive states."""
+    import jax.numpy as jnp
+    from repro.core import bitset, jaxsim, ppcc
+    from repro.core.types import paper_figure_params
+
+    p = paper_figure_params(7).with_(mpl=150)
+    n_slots = 160
+    init, cond, step = jaxsim.engine_parts(p, "ppcc", n_slots=n_slots,
+                                           pool=1024)
+    idx = jnp.arange(n_slots)
+
+    def cursor(s):
+        op_i = jnp.minimum(s.op_idx, s.kinds.shape[1] - 1)
+        return s.items[idx, op_i], s.kinds[idx, op_i] == jnp.int8(1)
+
+    s = init(0, 150)
+    counts, it = [], 0
+    while bool(cond(s)) and it < iters:
+        ci, cw = cursor(s)
+        s2 = step(s)
+        ni, nw = cursor(s2)
+        counts.append(int(ppcc.dirty_slots(s.pstate, s2.pstate,
+                                           ci, ni, cw, nw).sum()))
+        s = s2
+        it += 1
+    counts.sort()
+    k = bitset.bucket(max(1, n_slots // 4), 8)
+    edges = [0, 1, 5, 10, 20, 40, 80, n_slots + 1]
+    hist = {f"[{lo},{hi})": sum(lo <= c < hi for c in counts)
+            for lo, hi in zip(edges, edges[1:])}
+    return {
+        "what": "dirty rows per cohort quantum, fig7 mpl=150 "
+                f"({iters} quanta; n_slots={n_slots})",
+        "p50": counts[len(counts) // 2],
+        "p90": counts[(9 * len(counts)) // 10],
+        "max": counts[-1],
+        "hist": hist,
+        "delta_k": k,
+        "quanta_over_k": sum(c > k for c in counts),
+    }
+
+
 def sweep(args):
     """Fleet sweep vs the per-point cohort-engine loop on the fig7 grid
     (3 protocols x 7 MPL points x 2 seeds).  Before = one
@@ -700,6 +749,52 @@ def sweep(args):
               file=sys.stderr)
         sys.exit(1)
 
+    # delta-maintained relations vs the full per-step recompute
+    # (DESIGN.md §3.2).  The delta fleet re-runs the SAME fig7 grid with
+    # EngCfg.delta=True — loop-carried relation tables, dirty-row slab
+    # updates — and its commits AND iteration counts must match the
+    # full-recompute fleet exactly (the delta path is maintenance, not
+    # approximation); a mismatch exits nonzero.  The dirty-row
+    # occupancy probe backs the slab bucket choice with measured
+    # per-quantum dirty counts.
+    t0 = time.time()
+    out_dl, fleet_dl = fleet_sweep.run_fleet(7, MPL_GRID, seeds, horizon,
+                                             delta=True)
+    dl_cold_s = time.time() - t0
+    t0 = time.time()
+    jax.block_until_ready(fleet_dl(MPL_GRID, seeds))
+    dl_warm_s = time.time() - t0
+    delta_identical = all(
+        np.array_equal(out[proto][metric], out_dl[proto][metric])
+        for proto in PROTOCOLS for metric in out[proto])
+    occ = _dirty_occupancy()
+    delta_vs_full = {
+        "what": "fig7-grid fleet wall time: delta-maintained pairwise "
+                "relations (EngCfg.delta — dirty-row slab kernel over "
+                "loop-carried tables, O(K·n·w) per step) vs full "
+                "per-step recompute (O(n²·w)); bit_identical checks "
+                "commits AND iteration counts across the whole grid",
+        "full_recompute": packed_now,
+        "delta": _timing_record(
+            horizon=horizon, seeds=len(seeds),
+            cold_wall_s=round(dl_cold_s, 2),
+            warm_wall_s=round(dl_warm_s, 2),
+            devices=jax.device_count(), n_slots=fleet_dl.n_slots),
+        "bit_identical": bool(delta_identical),
+        "warm_speedup": round(rerun_s / max(dl_warm_s, 1e-9), 2),
+        "cold_speedup": round(after_s / max(dl_cold_s, 1e-9), 2),
+        "occupancy": occ,
+    }
+    _row("sweep_fig7_delta_vs_full", dl_warm_s * 1e6,
+         f"warm_speedup={delta_vs_full['warm_speedup']}x"
+         f" bit_identical={delta_identical}"
+         f" full_warm_s={rerun_s:.1f} delta_warm_s={dl_warm_s:.1f}"
+         f" dirty_p90={occ['p90']} k={occ['delta_k']}")
+    if not delta_identical:
+        print("DELTA/FULL MISMATCH: fleet outputs differ",
+              file=sys.stderr)
+        sys.exit(1)
+
     # merge into the existing file: each bench owns its keys — a sweep
     # run must not clobber `figures` / `one_exec_vs_per_fig` records
     # written by other benches (the PR-6 writer rebuilt the payload and
@@ -724,6 +819,7 @@ def sweep(args):
         },
         "packed_vs_boolean": packed_vs_boolean,
         "fused_vs_multipass": fused_vs_multipass,
+        "delta_vs_full": delta_vs_full,
     })
     if per_point is not None:
         payload["before_per_point_loop"] = {
@@ -879,6 +975,11 @@ def main() -> None:
     ap.add_argument("--peak-tol", type=float, default=PEAK_TOL,
                     help="relative tolerance for the reproduced-vs-paper "
                          "peak drift check (fails the run under --full)")
+    ap.add_argument("--delta", action="store_true",
+                    help="figure benches: run the fleets with delta-"
+                         "maintained conflict relations (EngCfg.delta) "
+                         "— bit-identical results, dirty-row slab "
+                         "updates instead of full per-step recompute")
     ap.add_argument("--skip-baseline", action="store_true",
                     help="sweep bench: skip the 42-point per-point "
                          "recompile loop and only drive the fleet (CI "

@@ -109,6 +109,8 @@ class RtParams(NamedTuple):
     len_hi: jax.Array
     cpus: jax.Array         # live pool sizes (<= cfg.cpus / cfg.disks)
     disks: jax.Array
+    zipf_theta: jax.Array   # f32 hot-spot skew (0 = uniform, bit-exact
+                            # legacy streams; see _zipf_map)
 
 
 def rt_of(p: SimParams) -> RtParams:
@@ -117,7 +119,8 @@ def rt_of(p: SimParams) -> RtParams:
         d=jnp.int32(p.db_size), write_prob=jnp.float32(p.write_prob),
         len_lo=jnp.int32(max(2, p.txn_size_mean - p.txn_size_spread)),
         len_hi=jnp.int32(p.txn_size_mean + p.txn_size_spread),
-        cpus=jnp.int32(p.num_cpus), disks=jnp.int32(p.num_disks))
+        cpus=jnp.int32(p.num_cpus), disks=jnp.int32(p.num_disks),
+        zipf_theta=jnp.float32(getattr(p, "zipf_theta", 0.0)))
 
 
 class EngState(NamedTuple):
@@ -144,6 +147,10 @@ class EngState(NamedTuple):
     pool_items: jax.Array        # int32[P, L]
     pool_next: jax.Array         # int32 next pool row to hand out
     rt: RtParams                 # runtime workload axes (loop-invariant)
+    rel: P.Relations             # carried (n,n) relation tables when
+                                 # EngCfg.delta (else (0,0) placeholders);
+                                 # invariant: equals compute_relations of
+                                 # pstate + this iteration's op cursor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +194,16 @@ class EngCfg:
                                  # quantum); compiled path — real
                                  # accelerators only, CPU keeps the
                                  # bit-identical jnp twin
+    delta: bool = False          # ppcc+fused: carry the (n,n) relation
+                                 # tables in the loop state and update
+                                 # only the dirty rows per iteration via
+                                 # the row-slab kernel (DESIGN.md §3.2);
+                                 # bit-identical to full recompute
+    delta_k: int = 0             # dirty-row slab capacity (static); a
+                                 # non-fleet step falls back to full
+                                 # recompute past it, a fleet step loops
+                                 # K-sized chunks until the dirty set is
+                                 # drained
 
 
 def _cfg(p: SimParams, max_iters: int) -> EngCfg:
@@ -208,6 +225,30 @@ def _cfg(p: SimParams, max_iters: int) -> EngCfg:
 # workload sampling (in-kernel)
 # --------------------------------------------------------------------------
 
+def _zipf_cdf(cfg: EngCfg, rt: RtParams) -> jax.Array:
+    """CDF over item ranks for Zipf(``rt.zipf_theta``) hot-spot skew.
+
+    Static ``cfg.d`` width with ranks past the live ``rt.d`` masked to
+    zero weight, so the shape stays bucket-invariant.  Loop-invariant —
+    hoist it out of per-op scans."""
+    ranks = jnp.arange(cfg.d, dtype=jnp.float32) + 1.0
+    w = jnp.where(jnp.arange(cfg.d) < rt.d,
+                  ranks ** (-rt.zipf_theta), 0.0)
+    return jnp.cumsum(w) / jnp.maximum(w.sum(), jnp.float32(1e-30))
+
+
+def _zipf_map(cdf: jax.Array, raw: jax.Array, rt: RtParams) -> jax.Array:
+    """Remap uniform draws ``raw`` in [0, rt.d) through the Zipf CDF.
+
+    Sampler-only inverse-CDF transform: the PRNG draw itself is kept, so
+    at ``zipf_theta == 0`` the returned items are bit-identical to the
+    legacy uniform stream (the ``where`` selects ``raw`` untouched)."""
+    u = raw.astype(jnp.float32) / rt.d.astype(jnp.float32)
+    z = jnp.searchsorted(cdf, u, side="right").astype(raw.dtype)
+    z = jnp.minimum(z, rt.d - 1)
+    return jnp.where(rt.zipf_theta > 0, z, raw)
+
+
 def sample_txn(key: jax.Array, cfg: EngCfg, rt: RtParams
                ) -> Tuple[jax.Array, jax.Array]:
     """One transaction: (kinds int8[L], items int32[L]); -1 pads.
@@ -223,6 +264,7 @@ def sample_txn(key: jax.Array, cfg: EngCfg, rt: RtParams
     length = jax.random.randint(kl, (), rt.len_lo, rt.len_hi + 1)
     want_w = jax.random.uniform(kw, (D,)) < rt.write_prob
     keys = jax.random.split(ki, D)
+    zcdf = _zipf_cdf(cfg, rt)      # loop-invariant: hoisted off the scan
 
     def slot(carry, inp):
         read_items, n_read, written = carry
@@ -235,7 +277,7 @@ def sample_txn(key: jax.Array, cfg: EngCfg, rt: RtParams
         logits = jnp.where(avail | (n_avail == 0), 0.0, -jnp.inf)
         wpick = jax.random.categorical(k1, logits)
         item_w = read_items[wpick]
-        item_r = jax.random.randint(k2, (), 0, rt.d)
+        item_r = _zipf_map(zcdf, jax.random.randint(k2, (), 0, rt.d), rt)
         item = jnp.where(do_write, item_w, item_r)
         kind = jnp.where(do_write, 1, 0).astype(jnp.int8)
         kind = jnp.where(j < length, kind, jnp.int8(-1))
@@ -268,7 +310,8 @@ def sample_txns(key: jax.Array, cfg: EngCfg, rt: RtParams, n: int
     kl, kw, kp, kr = jax.random.split(key, 4)
     length = jax.random.randint(kl, (n,), rt.len_lo, rt.len_hi + 1)
     want_w = jax.random.uniform(kw, (n, L)) < rt.write_prob
-    read_cand = jax.random.randint(kr, (n, L), 0, rt.d)
+    read_cand = _zipf_map(_zipf_cdf(cfg, rt),
+                          jax.random.randint(kr, (n, L), 0, rt.d), rt)
     pick_u = jax.random.uniform(kp, (n, L))
 
     rows = jnp.arange(n)
@@ -695,6 +738,68 @@ def _wc_cohort(cfg: EngCfg, ps: P.PPCCState, dirty: jax.Array,
     return ps, wc_m & ~fail, zeros, zeros, wc_m & fail
 
 
+def _rowslab_rows(cfg: EngCfg, ps, rel, item, is_write, slab, valid):
+    """Dispatch the (K, n) row-slab kernel: Pallas launch on the
+    megakernel path, bit-identical jnp twin otherwise."""
+    if cfg.megakernel:
+        from ..kernels import ops as kops
+        return kops.rowslab_relations(
+            ps.read_set, ps.write_set, rel.writers_at, rel.readers_at,
+            item, is_write, ps.active, slab, valid)
+    from ..kernels import conflict as kconf
+    return kconf.rowslab(
+        ps.read_set, ps.write_set, rel.writers_at, rel.readers_at,
+        item, is_write, ps.active, slab, valid)
+
+
+def _delta_update(cfg: EngCfg, s: EngState, ps5, cur_item, cur_w,
+                  new_kinds, new_items, op_new) -> "P.Relations":
+    """Delta-maintain the carried relation tables for the next
+    iteration's cursor (DESIGN.md §3.2): find the slots whose packed
+    words or op cursor changed, recompute only those (K, n) rows via
+    the row-slab kernel, and scatter rows + mirrored columns back.
+
+    Non-fleet bodies guard exactness with a ``lax.cond`` full-recompute
+    fallback on slab overflow.  Fleet bodies run under vmap, where a
+    cond decays into both branches + select — they instead drain the
+    dirty set K ids at a time in a ``while_loop``; later chunks'
+    mirrored column writes repair the stale dirty×dirty cross entries,
+    so the loop converges to the full recompute exactly."""
+    n = cfg.n
+    idx = jnp.arange(n, dtype=jnp.int32)
+    nxt_i = jnp.minimum(op_new, cfg.max_ops - 1)
+    nxt_item = new_items[idx, nxt_i]
+    nxt_w = new_kinds[idx, nxt_i] == jnp.int8(1)
+    dirty_m = P.dirty_slots(s.pstate, ps5, cur_item, nxt_item,
+                            cur_w, nxt_w)
+    k = cfg.delta_k
+
+    def slab_rows(rel, slab, valid):
+        rows = _rowslab_rows(cfg, ps5, rel, nxt_item, nxt_w, slab, valid)
+        return P.scatter_relations(rel, *rows, slab, valid)
+
+    if cfg.fleet:
+        ids = jnp.nonzero(dirty_m, size=n, fill_value=n)[0] \
+            .astype(jnp.int32)
+        m = dirty_m.sum(dtype=jnp.int32)
+
+        def body(carry):
+            rel, c = carry
+            slab = jax.lax.dynamic_slice_in_dim(ids, c * k, k)
+            return slab_rows(rel, slab, slab < n), c + 1
+
+        rel, _ = jax.lax.while_loop(
+            lambda carry: carry[1] * k < m, body, (s.rel, jnp.int32(0)))
+        return rel
+
+    slab, valid, cnt = P.dirty_slab(dirty_m, k)
+    return jax.lax.cond(
+        cnt > k,
+        lambda rel: P.compute_relations(ps5, nxt_item, nxt_w),
+        lambda rel: slab_rows(rel, slab, valid),
+        s.rel)
+
+
 def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
     n = cfg.n
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -747,7 +852,12 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
         # write-write join (see cohort_step_fused).  Bit-identical to
         # the multipass chain below under order="index".
         rel = None
-        if cfg.megakernel:
+        if cfg.delta:
+            # the carried tables already equal this iteration's full
+            # recompute (the end-of-body delta pass maintains them for
+            # the NEXT cursor) — only the cheap O(n·w) reductions run
+            rel = P.relations_inputs(s.rel, read_m, s.pstate.haslocks)
+        elif cfg.megakernel:
             from ..kernels import ops as kops
             rel = kops.megastep_relations(
                 s.pstate.read_set, s.pstate.write_set, s.dirty, cur_item,
@@ -967,9 +1077,16 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
     waiting = (ph == PH_BLOCKED) | (ph == PH_WC_LOCK) | (ph == PH_WC_PREC)
     nt = jnp.where(any_leave & waiting, jnp.minimum(nt, t0), nt)
 
+    # ---------------- delta relation maintenance ----------------------
+    if cfg.delta and cfg.protocol == "ppcc" and cfg.fused:
+        rel_c = _delta_update(cfg, s, ps5, cur_item, cur_w,
+                              new_kinds, new_items, op_new)
+    else:
+        rel_c = s.rel
+
     new_blocks = (v_block & ~was_blocked).sum()
     return s._replace(
-        pstate=ps5, dirty=dirty, kinds=new_kinds, items=new_items,
+        pstate=ps5, dirty=dirty, kinds=new_kinds, items=new_items, rel=rel_c,
         op_idx=op_new, phase=ph, next_time=nt, next_kind=nk, deadline=dl,
         flush_left=fl, cpu_free=cpu_free, disk_free=disk_free,
         commits=s.commits + commit_now.sum(),
@@ -1005,7 +1122,8 @@ def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
                        max_iters: int = 400_000, step_mode: str = "cohort",
                        cohort_dt: float = None, fleet: bool = False,
                        pool: int = 0, fused: bool = True,
-                       order: str = "index"):
+                       order: str = "index", delta: bool = False,
+                       delta_k: int = 0):
     """An engine whose MPL is a RUNTIME parameter (DESIGN.md §2.4).
 
     The slot axis is padded to the static bucket ``n_slots``; the
@@ -1022,7 +1140,8 @@ def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
                                     step_mode=step_mode,
                                     cohort_dt=cohort_dt, n_slots=n_slots,
                                     fleet=fleet, pool=pool, fused=fused,
-                                    order=order)
+                                    order=order, delta=delta,
+                                    delta_k=delta_k)
 
     @jax.jit
     def _run(seed: jax.Array, mpl: jax.Array, rt: RtParams) -> EngState:
@@ -1070,7 +1189,8 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
                  step_mode: str = "cohort", cohort_dt: float = None,
                  n_slots: int = None, fleet: bool = False, pool: int = 0,
                  fused: bool = True, order: str = "index",
-                 megakernel: bool = None):
+                 megakernel: bool = None, delta: bool = False,
+                 delta_k: int = 0):
     """(init, cond, step) for single-stepping an engine from tests —
     e.g. checking protocol invariants after every cohort step.
 
@@ -1091,10 +1211,18 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
         n_slots = p.mpl
     if n_slots < p.mpl:
         raise ValueError(f"n_slots={n_slots} < mpl={p.mpl}")
+    if delta and delta_k <= 0:
+        # measured dirty-row occupancy sits well under n/4 per quantum
+        # (BENCH_sweep.json["delta_vs_full"]["occupancy"]); bucket to a
+        # lane multiple so the slab tiles cleanly
+        delta_k = B.bucket(max(1, n_slots // 4), 8)
+    carry_rel = delta and protocol == "ppcc" and fused and \
+        step_mode == "cohort"
     cfg = dataclasses.replace(_cfg(p, max_iters), protocol=protocol,
                               cohort_dt=float(cohort_dt), n=n_slots,
                               fleet=fleet, pool=pool, fused=fused,
-                              order=order, megakernel=megakernel)
+                              order=order, megakernel=megakernel,
+                              delta=carry_rel, delta_k=delta_k)
 
     def init(seed, mpl=None, rt: RtParams = None) -> EngState:
         if mpl is None:
@@ -1132,15 +1260,25 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
             blocks=jnp.int32(0), ops_done=jnp.int32(0),
             iters=jnp.int32(0),
             pool_kinds=pool_kinds, pool_items=pool_items,
-            pool_next=jnp.int32(0), rt=rt)
+            pool_next=jnp.int32(0), rt=rt,
+            rel=P.empty_relations(cfg.n if cfg.delta else 0))
         # begin only the first `mpl` slots; the rest stay PH_OFF/INF so
         # every cohort mask derived from `ready` leaves them inert
-        return jax.lax.fori_loop(
+        s = jax.lax.fori_loop(
             0, cfg.n,
             lambda i, s_: jax.lax.cond(
                 i < mpl,
                 lambda s2: _begin_txn(cfg, s2, i, jnp.bool_(True)),
                 lambda s2: s2, s_), s)
+        if cfg.delta:
+            # seed the carried-tables invariant: rel equals the full
+            # recompute at the first body's op cursor
+            idx0 = jnp.arange(cfg.n, dtype=jnp.int32)
+            op_i = jnp.minimum(s.op_idx, cfg.max_ops - 1)
+            s = s._replace(rel=P.compute_relations(
+                s.pstate, s.items[idx0, op_i],
+                s.kinds[idx0, op_i] == jnp.int8(1)))
+        return s
 
     def cond(s: EngState):
         return (s.now <= cfg.horizon) & (s.iters < cfg.max_iters) & \

@@ -121,13 +121,17 @@ class Fleet:
     ``fused=False`` runs the ppcc lanes through the legacy multipass
     cohort chain instead of ``ppcc.cohort_step_fused`` — bit-identical
     results, kept for the fused-vs-multipass benchmark comparison.
+    ``delta=True`` carries the ppcc relation tables across iterations
+    and updates only the dirty rows per quantum (DESIGN.md §3.2) —
+    also bit-identical; the delta-vs-full benchmark compares the two.
     """
 
     def __init__(self, p: SimParams, protocols: Sequence[str] = PROTOCOLS,
                  n_slots: Optional[int] = None, max_iters: int = 400_000,
                  cohort_dt: Optional[float] = None, mesh=None,
                  pool: Optional[int] = None, fused: bool = True,
-                 order: str = "index"):
+                 order: str = "index", delta: bool = False,
+                 delta_k: int = 0):
         if n_slots is None:
             n_slots = slot_bucket(p.mpl)
         if pool is None:
@@ -145,7 +149,7 @@ class Fleet:
             proto: jaxsim.engine_parts(
                 p, proto, max_iters=max_iters, cohort_dt=cohort_dt,
                 n_slots=n_slots, fleet=True, pool=pool, fused=fused,
-                order=order)
+                order=order, delta=delta, delta_k=delta_k)
             for proto in self.protocols
         }
 
@@ -211,7 +215,7 @@ class Fleet:
 def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
               horizon: float, protocols: Sequence[str] = PROTOCOLS,
               n_slots: Optional[int] = None, max_iters: int = 400_000,
-              shard: bool = True, fused: bool = True,
+              shard: bool = True, fused: bool = True, delta: bool = False,
               ) -> Tuple[Dict[str, Dict[str, np.ndarray]], Fleet]:
     """Run one paper figure's full grid as a single compiled call.
 
@@ -225,7 +229,7 @@ def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
     n_lanes = len(mpl_grid) * len(seeds)
     mesh = fleet_mesh(n_lanes) if shard else None
     fleet = Fleet(p, protocols=protocols, n_slots=n_slots,
-                  max_iters=max_iters, mesh=mesh, fused=fused)
+                  max_iters=max_iters, mesh=mesh, fused=fused, delta=delta)
     out = fleet(list(mpl_grid), list(seeds))
     host = jax.tree.map(np.asarray, out)
     return host, fleet
@@ -252,7 +256,7 @@ def run_grid(figs: Sequence[int] = GRID_FIGS,
              seeds: Sequence[int] = (0, 1), horizon: float = 20_000.0,
              protocols: Sequence[str] = PROTOCOLS,
              n_slots: Optional[int] = None, max_iters: int = 400_000,
-             shard: bool = True, fused: bool = True,
+             shard: bool = True, fused: bool = True, delta: bool = False,
              fleet: Optional[Fleet] = None,
              ) -> Tuple[Dict[int, Dict[str, Dict[str, np.ndarray]]],
                         Fleet]:
@@ -275,7 +279,8 @@ def run_grid(figs: Sequence[int] = GRID_FIGS,
             n_slots = slot_bucket(max(mpl_grid))
         mesh = fleet_mesh(n_lanes) if shard else None
         fleet = Fleet(cover, protocols=protocols, n_slots=n_slots,
-                      max_iters=max_iters, mesh=mesh, fused=fused)
+                      max_iters=max_iters, mesh=mesh, fused=fused,
+                      delta=delta)
     seed_l, mpl_l, rt_l = grid_lanes(figs, mpl_grid, seeds)
     flat = fleet.run_lanes(seed_l, mpl_l, rt_l)
     shape = (len(figs), len(mpl_grid), len(seeds))

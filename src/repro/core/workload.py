@@ -8,11 +8,36 @@ item, matching the paper's description of the w=0.5 setting.
 """
 from __future__ import annotations
 
+import functools
 from typing import List, Sequence
 
 import numpy as np
 
 from .types import Op, OpKind, SimParams
+
+
+@functools.lru_cache(maxsize=64)
+def _zipf_cdf(db_size: int, theta: float) -> np.ndarray:
+    """CDF over item ranks for Zipf(theta) hot-spot skew (rank r gets
+    weight (r+1)^-theta; item ids double as ranks, so low ids are hot)."""
+    w = (np.arange(db_size, dtype=np.float64) + 1.0) ** (-theta)
+    return np.cumsum(w) / w.sum()
+
+
+def _draw_item(rng: np.random.Generator, p: SimParams) -> int:
+    """One read-item draw: uniform, or remapped through the Zipf CDF
+    when ``p.zipf_theta`` is set.  The uniform draw itself is kept (the
+    remap is a sampler-only inverse-CDF transform), so theta == 0 is
+    bit-identical to the legacy stream — the same invariant the JAX
+    samplers keep (``jaxsim._zipf_map``)."""
+    item = int(rng.integers(p.db_size))
+    theta = getattr(p, "zipf_theta", 0.0)
+    if theta:
+        cdf = _zipf_cdf(p.db_size, theta)
+        u = item / p.db_size
+        item = min(int(np.searchsorted(cdf, u, side="right")),
+                   p.db_size - 1)
+    return item
 
 
 def sample_txn_ops(rng: np.random.Generator, p: SimParams) -> List[Op]:
@@ -40,7 +65,7 @@ def sample_txn_ops(rng: np.random.Generator, p: SimParams) -> List[Op]:
         else:
             # Draw an unread item (retry loop is fine: db >> txn size).
             for _ in range(64):
-                item = int(rng.integers(p.db_size))
+                item = _draw_item(rng, p)
                 if item not in read_items:
                     break
             read_items.append(item)

@@ -115,6 +115,131 @@ def _megastep_kernel(read_ref, write_ref, dirty_ref, opw_ref, opb_ref,
     lockhit_ref[...] |= (ww & hl_j[None, :]).any(axis=1)
 
 
+def _rowslab_kernel(read_ref, write_ref, wat_ref, rat_ref, opw_ref,
+                    opb_ref, isw_ref, act_ref, sl_ref, valid_ref,
+                    dep_ref, ww_ref, watr_ref, ratr_ref, *,
+                    n: int, k: int, bj: int):
+    j = pl.program_id(0)
+    gj = j * bj + jnp.arange(bj)
+
+    # resident packed words, carried op tables, op metadata
+    read_w = read_ref[...]                           # uint32[n, W]
+    write_w = write_ref[...]                         # uint32[n, W]
+    wat = wat_ref[...]                               # bool[n, n] carried
+    rat = rat_ref[...]
+    opw = opw_ref[...]
+    opb = opb_ref[...]
+    isw = isw_ref[...]
+    act = act_ref[...]
+    sl = sl_ref[...]                                 # int32[k] clamped ids
+    valid = valid_ref[...]                           # bool[k]
+
+    def memb(words, w_idx, b_idx):
+        cols = jnp.take(words, w_idx, axis=1)        # [n, m] uint32
+        return ((cols >> b_idx[None, :]) & 1).astype(bool)
+
+    opw_s = jnp.take(opw, sl)
+    opb_s = jnp.take(opb, sl)
+    isw_s = jnp.take(isw, sl)
+    w_at_s = memb(write_w, opw_s, opb_s)             # [n, k] fresh tables
+    r_at_s = memb(read_w, opw_s, opb_s)
+
+    # party rows of the slab slots, straight from the fresh tables
+    others_s = jnp.where(isw_s[None, :], r_at_s, w_at_s)
+    self_s = jnp.arange(n)[:, None] == sl[None, :]
+    p_s = ((others_s & act[:, None] & ~self_s) | self_s).T   # [k, n]
+
+    # party rows of the j column tile — carried tables with the slab
+    # rows substituted (sel has at most one hit per row: ids unique)
+    sel = (sl[None, :] == gj[:, None]) & valid[None, :]      # [bj, k]
+    hit = sel.any(axis=1)
+    wat_j = jax.lax.dynamic_slice_in_dim(wat, j * bj, bj)    # [bj, n]
+    rat_j = jax.lax.dynamic_slice_in_dim(rat, j * bj, bj)
+    fresh_w = (sel.astype(jnp.int32) @ w_at_s.T.astype(jnp.int32)) > 0
+    fresh_r = (sel.astype(jnp.int32) @ r_at_s.T.astype(jnp.int32)) > 0
+    wat_j = jnp.where(hit[:, None], fresh_w, wat_j)
+    rat_j = jnp.where(hit[:, None], fresh_r, rat_j)
+    isw_j = jax.lax.dynamic_slice_in_dim(isw, j * bj, bj)
+    others_j = jnp.where(isw_j[:, None], rat_j, wat_j)
+    self_j = gj[:, None] == jnp.arange(n)[None, :]
+    p_j = (others_j & act[None, :] & ~self_j) | self_j       # [bj, n]
+
+    join = (p_s.astype(jnp.int32) @ p_j.astype(jnp.int32).T) > 0
+    opw_j = jax.lax.dynamic_slice_in_dim(opw, j * bj, bj)
+    opb_j = jax.lax.dynamic_slice_in_dim(opb, j * bj, bj)
+    same_item = (opw_s[:, None] == opw_j[None, :]) & \
+        (opb_s[:, None] == opb_j[None, :])
+    either_w = isw_s[:, None] | isw_j[None, :]
+    eye_s = sl[:, None] == gj[None, :]
+    v = valid[:, None]
+    dep_ref[...] = (join | (same_item & either_w)) & ~eye_s & v
+
+    ws = jnp.take(write_w, sl, axis=0)                       # [k, W]
+    wj = jax.lax.dynamic_slice_in_dim(write_w, j * bj, bj)   # [bj, W]
+    ww_ref[...] = ((ws[:, None, :] & wj[None, :, :]) != 0
+                   ).any(axis=-1) & ~eye_s & v
+    watr_ref[...] = jax.lax.dynamic_slice_in_dim(
+        w_at_s.T, j * bj, bj, axis=1) & v
+    ratr_ref[...] = jax.lax.dynamic_slice_in_dim(
+        r_at_s.T, j * bj, bj, axis=1) & v
+
+
+def rowslab(read_bits: jax.Array, write_bits: jax.Array,
+            writers_at: jax.Array, readers_at: jax.Array,
+            item: jax.Array, is_write: jax.Array, active: jax.Array,
+            slab: jax.Array, valid: jax.Array, *,
+            block: int = 32, interpret: bool = False):
+    """Pallas variant of the (K, n) dirty-row slab kernel (DESIGN.md
+    §3.2), resident-words layout: the packed read/write words and the
+    carried ``writers_at``/``readers_at`` tables stay in VMEM across the
+    column-tile grid while each program emits one (K, bj) tile of the
+    four relation row blocks.  Bit-identical to ``ref.rowslab_ref`` /
+    the ``conflict.rowslab`` jnp twin; n may be any size (inert-row
+    padding, outputs sliced back)."""
+    n, w = read_bits.shape
+    assert write_bits.shape == (n, w)
+    assert writers_at.shape == (n, n) and readers_at.shape == (n, n)
+    k = slab.shape[0]
+    bj = min(block, max(n, 1))
+    pad = (-n) % bj
+    sl = jnp.clip(slab, 0, n - 1).astype(jnp.int32)
+    if pad:
+        zrow = jnp.zeros((pad, w), jnp.uint32)
+        read_bits = jnp.concatenate([read_bits, zrow])
+        write_bits = jnp.concatenate([write_bits, zrow])
+        writers_at = jnp.pad(writers_at, ((0, pad), (0, pad)))
+        readers_at = jnp.pad(readers_at, ((0, pad), (0, pad)))
+        item = jnp.concatenate([item, jnp.zeros(pad, item.dtype)])
+        zflag = jnp.zeros(pad, bool)
+        is_write = jnp.concatenate([is_write, zflag])
+        active = jnp.concatenate([active, zflag])
+    np_ = n + pad
+    grid = (np_ // bj,)
+    opw = (item >> 5).astype(jnp.int32)
+    opb = (item & 31).astype(jnp.uint32)
+    kernel = functools.partial(_rowslab_kernel, n=np_, k=k, bj=bj)
+    full = lambda *shape: pl.BlockSpec(shape, lambda j: (0,) * len(shape))  # noqa: E731
+    dep, ww, wat, rat = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            full(np_, w), full(np_, w),                     # words
+            full(np_, np_), full(np_, np_),                 # carried tables
+            full(np_), full(np_), full(np_), full(np_),     # op meta/flags
+            full(k), full(k),                               # slab
+        ],
+        out_specs=[pl.BlockSpec((k, bj), lambda j: (0, j))
+                   for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((k, np_), jnp.bool_)
+                   for _ in range(4)],
+        interpret=interpret,
+    )(read_bits, write_bits, writers_at, readers_at, opw, opb, is_write,
+      active, sl, valid)
+    if pad:
+        dep, ww, wat, rat = (m[:, :n] for m in (dep, ww, wat, rat))
+    return dep, ww, wat, rat
+
+
 def megastep(read_bits: jax.Array, write_bits: jax.Array,
              dirty_bits: jax.Array, item: jax.Array, is_write: jax.Array,
              active: jax.Array, ready: jax.Array, haslocks: jax.Array, *,

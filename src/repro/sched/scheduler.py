@@ -70,6 +70,21 @@ class TickResult(NamedTuple):
     state: ppcc.PPCCState     # protocol state after the tick (ppcc)
 
 
+class TickCarry(NamedTuple):
+    """Carried pairwise state for back-to-back ticks.
+
+    Holds the previous tick's packed set words plus the full fused
+    conflict launch output (``conflict_fused_full``'s 7-tuple).  When
+    the next tick's words and valid mask are unchanged — common when
+    the pending batch persists across ticks (blocked actors retrying) —
+    the O(n²·w) launch is skipped and the carried matrices are reused
+    (a ``lax.cond`` guards exactness)."""
+    read_bits: jax.Array      # uint32[n, W]
+    write_bits: jax.Array     # uint32[n, W]
+    valid: jax.Array          # bool[n]
+    rel: Tuple[jax.Array, ...]  # conflict_fused_full output (7-tuple)
+
+
 def _conflict_matrices(read_bits: jax.Array, write_bits: jax.Array,
                        use_kernel: bool
                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
@@ -86,7 +101,9 @@ def _conflict_matrices(read_bits: jax.Array, write_bits: jax.Array,
 
 def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
               valid: jax.Array, use_kernel: bool = True,
-              order: str = "priority", words: int = None) -> TickResult:
+              order: str = "priority", words: int = None,
+              carry: TickCarry = None, return_carry: bool = False
+              ) -> TickResult:
     """Admit a batch of single-shot transactions under PPCC.
 
     read_sets/write_sets: bool[n, d]; valid: bool[n].  Each transaction
@@ -110,26 +127,45 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
     fused kernel's per-row popcounts) instead of priority order:
     low-conflict transactions claim their arcs first, which admits
     larger batches under contention at the cost of strict priority.
+
+    ``carry`` (a previous tick's ``TickCarry``) skips the fused
+    conflict launch entirely when the packed words and valid mask are
+    unchanged since that tick; pass ``return_carry=True`` to get
+    ``(TickResult, TickCarry)`` for the next tick.
     """
     n = read_sets.shape[0]
     rb = _as_bits(read_sets, words)
     wb = _as_bits(write_sets, words)
+    full = None
+    if order == "degree" or carry is not None or return_carry:
+        # One fused launch emits the matrices, all three degrees AND
+        # the diagonals.  With a carry whose inputs are unchanged the
+        # launch is skipped and the carried 7-tuple reused.
+        def launch():
+            return (kops.conflict_fused_full(rb, wb) if use_kernel
+                    else kops.ref.conflict_fused_full_ref(rb, wb))
+
+        if carry is not None:
+            unchanged = ((carry.read_bits == rb).all()
+                         & (carry.write_bits == wb).all()
+                         & (carry.valid == valid).all())
+            full = jax.lax.cond(unchanged, lambda: carry.rel, launch)
+        else:
+            full = launch()
+        raw, ww = full[0], full[1]
     if order == "degree":
         # total involvement = RAW out-degree + WAR in-degree (the
         # kernel's column-sum output) + WW degree; kernel degrees
         # include the diagonal and self-conflicts are not conflicts
-        # here, so strip it everywhere.  One fused launch emits the
-        # matrices, all three degrees AND the diagonals — the ordering
-        # key costs no extra pass over the materialised raw.
-        full = (kops.conflict_fused_full(rb, wb) if use_kernel
-                else kops.ref.conflict_fused_full_ref(rb, wb))
-        raw, ww, raw_deg, war_deg, ww_deg, diag_raw, diag_ww = full
+        # here, so strip it everywhere.
+        _, _, raw_deg, war_deg, ww_deg, diag_raw, diag_ww = full
         self_r = diag_raw.astype(jnp.int32)
         deg = (raw_deg - self_r + war_deg - self_r
                + ww_deg - diag_ww.astype(jnp.int32))
         seq = jnp.argsort(deg, stable=True).astype(jnp.int32)
     else:
-        raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
+        if full is None:
+            raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
         seq = jnp.arange(n, dtype=jnp.int32)
     raw = raw & ~jnp.eye(n, dtype=bool)              # self-RAW is not a conflict
 
@@ -163,9 +199,13 @@ def ppcc_tick(read_sets: jax.Array, write_sets: jax.Array,
     s = ppcc.init_state(n, 1)
     s = s._replace(prec=prec, preceding=preceding, preceded=preceded,
                    active=admitted)
-    return TickResult(admitted=admitted,
-                      aborted=jnp.zeros_like(admitted),
-                      commit_rank=commit_rank, state=s)
+    res = TickResult(admitted=admitted,
+                     aborted=jnp.zeros_like(admitted),
+                     commit_rank=commit_rank, state=s)
+    if return_carry:
+        return res, TickCarry(read_bits=rb, write_bits=wb, valid=valid,
+                              rel=full)
+    return res
 
 
 def twopl_tick(read_sets: jax.Array, write_sets: jax.Array,
@@ -221,14 +261,23 @@ def occ_tick(read_sets: jax.Array, write_sets: jax.Array,
 POLICIES = {"ppcc": ppcc_tick, "2pl": twopl_tick, "occ": occ_tick}
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "order", "words"))
+@functools.partial(jax.jit, static_argnames=("policy", "order", "words",
+                                             "return_carry"))
 def tick(read_sets: jax.Array, write_sets: jax.Array, valid: jax.Array,
          policy: str = "ppcc", order: str = "priority",
-         words: int = None) -> TickResult:
+         words: int = None, carry: TickCarry = None,
+         return_carry: bool = False) -> TickResult:
+    """One admission tick.  For ppcc, ``carry``/``return_carry`` thread
+    the pairwise conflict state across ticks: the fused O(n²·w) launch
+    is skipped whenever the packed set words and valid mask match the
+    carried tick's (see ``TickCarry``)."""
     if policy == "ppcc":
         return ppcc_tick(read_sets, write_sets, valid, order=order,
-                         words=words)
+                         words=words, carry=carry,
+                         return_carry=return_carry)
     if order != "priority":
         raise ValueError(
             f"order={order!r} is only supported for policy='ppcc'")
+    if carry is not None or return_carry:
+        raise ValueError("carried conflict state is ppcc-only")
     return POLICIES[policy](read_sets, write_sets, valid, words=words)

@@ -29,6 +29,58 @@ def test_protocol_ordering_preserved_high_contention():
     assert commits["ppcc"] >= commits["2pl"], commits
 
 
+def test_zipf_theta_zero_keeps_legacy_streams():
+    """The hot-spot knob is a sampler-only inverse-CDF remap: at
+    theta=0 both the numpy and JAX samplers must emit bit-identical
+    transactions to the pre-knob uniform streams."""
+    import numpy as np
+
+    from repro.core import workload
+    p = SimParams(db_size=100)
+    r1, r2 = np.random.default_rng(3), np.random.default_rng(3)
+    a = [workload.sample_txn_ops(r1, p) for _ in range(30)]
+    b = [workload.sample_txn_ops(r2, p.with_(zipf_theta=0.0))
+         for _ in range(30)]
+    assert a == b
+
+
+def test_zipf_skew_shifts_items_not_structure():
+    """theta > 0 remaps the JAX sampler's read items toward low ranks
+    without touching lengths or the read/write pattern (the PRNG draws
+    themselves are kept)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    p = SimParams(db_size=100, txn_size_mean=8)
+    cfg = jaxsim._cfg(p, 100)
+    rt0 = jaxsim.rt_of(p)
+    rtz = jaxsim.rt_of(p.with_(zipf_theta=0.9))
+    k = jax.random.PRNGKey(0)
+    k0, i0 = jaxsim.sample_txns(k, cfg, rt0, 64)
+    kz, iz = jaxsim.sample_txns(k, cfg, rtz, 64)
+    np.testing.assert_array_equal(np.asarray(k0), np.asarray(kz))
+    reads0 = np.asarray(i0)[np.asarray(k0) == 0]
+    readsz = np.asarray(iz)[np.asarray(kz) == 0]
+    hot0 = (reads0 < 10).mean()
+    hotz = (readsz < 10).mean()
+    assert hotz > 2 * max(hot0, 0.02), (hot0, hotz)
+
+
+def test_zipf_commit_counts_in_family():
+    """pysim/jaxsim statistical parity holds under hot-spot skew too
+    (both engines consume the same Zipf model through their own
+    samplers), and skew costs throughput vs uniform."""
+    p = SimParams(db_size=100, txn_size_mean=8, write_prob=0.2, mpl=16,
+                  horizon=5_000, seed=0, zipf_theta=0.8)
+    jr = jaxsim.simulate(p, "ppcc")
+    ref = sum(pysim.simulate(p.with_(seed=s), "ppcc").commits
+              for s in range(3)) / 3
+    assert jr.commits > 0
+    assert 0.55 * ref <= jr.commits <= 1.6 * ref, (jr.commits, ref)
+    uniform = jaxsim.simulate(p.with_(zipf_theta=0.0), "ppcc")
+    assert jr.commits < uniform.commits, (jr.commits, uniform.commits)
+
+
 def test_sweep_vmap_matches_single_runs():
     p = SimParams(db_size=60, txn_size_mean=6, write_prob=0.5, mpl=8,
                   horizon=2_000)
