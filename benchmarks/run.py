@@ -177,6 +177,22 @@ def _load_json(path: Path) -> dict:
     return {}
 
 
+def _merge_json(path: Path, updates: dict) -> None:
+    """Merge ``updates`` into the JSON file at ``path``: each bench owns
+    its top-level keys, and a nested dict (e.g. ``figures``,
+    ``telemetry``) is merged one level deep instead of replaced — so a
+    sweep run cannot clobber figure records and a telemetry run cannot
+    clobber the sweep comparison blocks (or vice versa)."""
+    import json
+    payload = _load_json(path)
+    for key, val in updates.items():
+        if isinstance(val, dict) and isinstance(payload.get(key), dict):
+            payload[key] = {**payload[key], **val}
+        else:
+            payload[key] = val
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+
 def _figure_report(fig: int, out_fig: dict, horizon: float, wall: float):
     """Peak/improvement CSV rows for one figure's fleet output block."""
     from repro.core.types import PAPER_PEAKS
@@ -273,18 +289,14 @@ def _record_figure(args, fig: int, horizon: float, seeds, deltas: dict,
                    curves: dict) -> None:
     """Under --full, append this figure's fleet results + paper deltas
     to BENCH_sweep.json (the ROADMAP fig8-16 coverage item)."""
-    import json
     path = Path(args.sweep_json_out)
-    payload = _load_json(path)
-    figures = payload.setdefault("figures", {})
-    figures[str(fig)] = {
+    _merge_json(path, {"figures": {str(fig): {
         "horizon": horizon,
         "seeds": len(seeds),
         "mpl_grid": list(MPL_GRID),
         "commits_mean": curves,
         "paper_peak_deltas": deltas,
-    }
-    path.write_text(json.dumps(payload, indent=2) + "\n")
+    }}})
     _row(f"fig{fig}_recorded", 0.0, f"wrote={path} key=figures.{fig}")
 
 
@@ -609,7 +621,6 @@ def sweep(args):
     packed-vs-boolean representation comparison (host-fingerprinted:
     only comparable on the machine the boolean baseline was measured
     on)."""
-    import json
     import jax
     from repro.core import jaxsim
     from repro.core import sweep as fleet_sweep
@@ -796,12 +807,11 @@ def sweep(args):
         sys.exit(1)
 
     # merge into the existing file: each bench owns its keys — a sweep
-    # run must not clobber `figures` / `one_exec_vs_per_fig` records
-    # written by other benches (the PR-6 writer rebuilt the payload and
-    # silently dropped them)
+    # run must not clobber `figures` / `one_exec_vs_per_fig` /
+    # `telemetry` records written by other benches (the PR-6 writer
+    # rebuilt the payload and silently dropped them)
     path = Path(args.sweep_json_out)
-    payload = _load_json(path)
-    payload.update({
+    updates = {
         "meta": {"fig": 7, "horizon": horizon, "seeds": len(seeds),
                  "mpl_grid": list(MPL_GRID),
                  "protocols": list(PROTOCOLS),
@@ -820,9 +830,9 @@ def sweep(args):
         "packed_vs_boolean": packed_vs_boolean,
         "fused_vs_multipass": fused_vs_multipass,
         "delta_vs_full": delta_vs_full,
-    })
+    }
     if per_point is not None:
-        payload["before_per_point_loop"] = {
+        updates["before_per_point_loop"] = {
             "wall_s": round(before_s, 1),
             "what": "per-point cohort-engine loop: jaxsim.simulate per "
                     "(protocol, mpl, seed), fresh trace + XLA compile "
@@ -830,11 +840,11 @@ def sweep(args):
                     "pysim loop, which is slower still)",
             "commits_mean": per_point,
         }
-        payload["speedup"] = round(before_s / after_s, 2)
-        payload["parity"] = {
+        updates["speedup"] = round(before_s / after_s, 2)
+        updates["parity"] = {
             "mean_rel_commit_diff": round(sum(rel) / len(rel), 4),
             "max_rel_commit_diff": round(max(rel), 4)}
-    path.write_text(json.dumps(payload, indent=2) + "\n")
+    _merge_json(path, updates)
     _row("sweep_json", 0.0, f"wrote={path}")
 
 
@@ -851,7 +861,6 @@ def one_exec(args):
     ``BENCH_sweep.json["one_exec_vs_per_fig"]`` — both sides measured
     live in this process, so the speedup is always self-comparable.
     """
-    import json
     import jax
     from repro.core import sweep as fleet_sweep
     from repro.core.types import GRID_FIGS
@@ -941,10 +950,151 @@ def one_exec(args):
         "comparable_config": True,
     }
     path = Path(args.sweep_json_out)
-    payload = _load_json(path)
-    payload["one_exec_vs_per_fig"] = record
-    path.write_text(json.dumps(payload, indent=2) + "\n")
+    _merge_json(path, {"one_exec_vs_per_fig": record})
     _row("one_exec_json", 0.0, f"wrote={path} key=one_exec_vs_per_fig")
+
+
+def telemetry(args):
+    """Observability cost + parity on the fig7 fleet (DESIGN.md §8).
+
+    OFF = the default fleet (all telemetry leaves shape-0).  ON = the
+    same grid with ``EngCfg.telemetry`` — in-loop latency/wait/restart
+    histograms, abort/block cause taxonomies, and the ring-buffer time
+    series (``trace_every=8``).  Hard gates (exit nonzero on failure):
+
+    * every engine metric array must be BIT-IDENTICAL between OFF and
+      ON — the telemetry fold reads the step's masks but must never
+      feed back into the simulation;
+    * the ON fleet must still compile exactly once (``traces == 1``).
+
+    Warm overhead (the steady-state cost of always-on telemetry), the
+    grid-aggregated percentile/cause summaries, and the compile stats
+    land in ``BENCH_sweep.json["telemetry"]``; one mid-grid lane's ring
+    buffer per protocol is exported as Perfetto/chrome-trace JSON to
+    ``--trace-out``; a ``jax.profiler`` device trace of one warm fleet
+    execution is captured when the profiler is available."""
+    import tempfile
+    import jax
+    from repro.core import sweep as fleet_sweep
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    horizon = args.horizon or (20_000.0 if args.full else HORIZON)
+    seeds = (0, 1, 2) if args.full else (0, 1)
+
+    # ---- OFF: the plain fleet (cold, then warm) ----------------------
+    t0 = time.time()
+    out_off, fleet_off = fleet_sweep.run_fleet(7, MPL_GRID, seeds,
+                                               horizon)
+    off_cold_s = time.time() - t0
+    t0 = time.time()
+    jax.block_until_ready(fleet_off(MPL_GRID, seeds))
+    off_warm_s = time.time() - t0
+
+    # ---- ON: telemetry + ring buffer ---------------------------------
+    t0 = time.time()
+    out_on, fleet_on = fleet_sweep.run_fleet(
+        7, MPL_GRID, seeds, horizon,
+        telemetry=True, trace_every=8, trace_len=256)
+    on_cold_s = time.time() - t0
+    t0 = time.time()
+    jax.block_until_ready(fleet_on(MPL_GRID, seeds))
+    on_warm_s = time.time() - t0
+
+    # zero-interference gate: same commits/aborts/blocks/ops/iters
+    identical = all(
+        np.array_equal(out_off[proto][k], out_on[proto][k])
+        for proto in PROTOCOLS for k in out_off[proto])
+    warm_overhead = on_warm_s / max(off_warm_s, 1e-9) - 1.0
+    _row("telemetry_fig7_overhead", on_warm_s * 1e6,
+         f"warm_overhead={100 * warm_overhead:+.1f}%"
+         f" off_warm_s={off_warm_s:.2f} on_warm_s={on_warm_s:.2f}"
+         f" bit_identical={identical} traces={fleet_on.traces}")
+    if not identical:
+        print("TELEMETRY INTERFERENCE: metric arrays differ between "
+              "telemetry off and on", file=sys.stderr)
+        sys.exit(1)
+    if fleet_on.traces != 1:
+        print(f"TELEMETRY RECOMPILE: fleet traced {fleet_on.traces}x "
+              "with telemetry on (expected 1)", file=sys.stderr)
+        sys.exit(1)
+
+    # grid-aggregated summaries (lane axes sum into the shared bins)
+    summaries = {proto: obs_metrics.summarize(out_on[proto]["telemetry"])
+                 for proto in PROTOCOLS}
+    for proto in PROTOCOLS:
+        s = summaries[proto]
+        lat, causes = s["commit_latency"], s["abort_causes"]
+        top = {c: v for c, v in causes.items() if v}
+        _row(f"telemetry_fig7_{proto}", 0.0,
+             f"commits={s['commits']} lat_p50={lat['p50']:.0f}"
+             f" lat_p99={lat['p99']:.0f}"
+             f" restarts_mean={s['restarts_mean']:.2f}"
+             f" abort_causes={top or 'none'}")
+
+    # one mid-grid lane's ring buffer per protocol -> Perfetto JSON
+    mid = len(MPL_GRID) // 2
+    lanes = {f"{proto}_mpl{MPL_GRID[mid]}":
+             np.asarray(out_on[proto]["telemetry"]["trace"])[mid, 0]
+             for proto in PROTOCOLS}
+    trace_path = Path(args.trace_out)
+    n_events = obs_trace.write_chrome_trace(
+        trace_path, lanes,
+        meta={"fig": 7, "horizon": horizon, "trace_every": 8,
+              "mpl": MPL_GRID[mid], "seed": seeds[0]})
+    _row("telemetry_trace_json", 0.0,
+         f"wrote={trace_path} events={n_events}")
+
+    # device-level profiler capture of one warm fleet execution —
+    # optional (profiler availability varies by backend/build), and
+    # bounded: a long-horizon fleet run produces a multi-GB host trace
+    # (measured ~70 GB RSS at horizon 20k), so only short smokes
+    # capture one
+    prof_dir = tempfile.mkdtemp(prefix="telemetry_jaxprof_")
+    if horizon > 2_000.0:
+        profiler_status = (f"skipped: horizon {horizon:g} too long for "
+                           "a bounded device trace (cap 2000)")
+    else:
+        profiler_status = "ok"
+        try:
+            jax.profiler.start_trace(prof_dir)
+            jax.block_until_ready(fleet_on(MPL_GRID, seeds))
+            jax.profiler.stop_trace()
+        except Exception as e:  # profiler missing/unsupported: go on
+            profiler_status = f"unavailable: {type(e).__name__}: {e}"
+    _row("telemetry_profiler", 0.0,
+         f"status={profiler_status.split(':')[0]} dir={prof_dir}")
+
+    record = {
+        "what": "fig7-grid fleet wall time with the obs layer off vs on "
+                "(EngCfg.telemetry + trace_every=8 ring buffer); "
+                "bit_identical checks every engine metric array — the "
+                "telemetry fold must never feed back into the "
+                "simulation — and traces==1 checks the ON fleet still "
+                "compiles once.  warm_overhead_frac is the steady-state "
+                "cost of always-on telemetry (target <= 0.10)",
+        "off": _timing_record(
+            horizon=horizon, seeds=len(seeds),
+            cold_wall_s=round(off_cold_s, 2),
+            warm_wall_s=round(off_warm_s, 2),
+            devices=jax.device_count(), n_slots=fleet_off.n_slots),
+        "on": _timing_record(
+            horizon=horizon, seeds=len(seeds),
+            cold_wall_s=round(on_cold_s, 2),
+            warm_wall_s=round(on_warm_s, 2),
+            devices=jax.device_count(), n_slots=fleet_on.n_slots,
+            traces=fleet_on.traces, trace_every=8, trace_len=256),
+        "bit_identical": bool(identical),
+        "warm_overhead_frac": round(warm_overhead, 4),
+        "cold_overhead_frac": round(
+            on_cold_s / max(off_cold_s, 1e-9) - 1.0, 4),
+        "summary": summaries,
+        "perfetto_trace": {"path": str(trace_path), "events": n_events},
+        "profiler": {"status": profiler_status, "dir": prof_dir},
+    }
+    path = Path(args.sweep_json_out)
+    _merge_json(path, {"telemetry": record})
+    _row("telemetry_json", 0.0, f"wrote={path} key=telemetry")
 
 
 BENCHES = dict(FIGS)
@@ -957,6 +1107,7 @@ BENCHES.update(
     engine=engine,
     sweep=sweep,
     one_exec=one_exec,
+    telemetry=telemetry,
 )
 
 
@@ -996,6 +1147,11 @@ def main() -> None:
                     default=str(Path(__file__).resolve().parents[1]
                                 / "BENCH_sweep.json"),
                     help="where the `sweep` bench writes its JSON")
+    ap.add_argument("--trace-out",
+                    default=str(Path(__file__).resolve().parents[1]
+                                / "BENCH_trace.json"),
+                    help="where the `telemetry` bench writes the "
+                         "Perfetto/chrome-trace ring-buffer export")
     args = ap.parse_args()
     if args.host_devices:
         assert "jax" not in sys.modules, \
@@ -1006,11 +1162,13 @@ def main() -> None:
             f"{args.host_devices}").strip()
     # the default figure path is the single-executable `figs` grid;
     # per-figure benches (fig5..fig16) stay reachable via --only.
-    # `engine` / `sweep` / `one_exec` run full grids and rewrite their
-    # BENCH json — opt-in via --only, never part of the default run
+    # `engine` / `sweep` / `one_exec` / `telemetry` run full grids and
+    # rewrite their BENCH json — opt-in via --only, never part of the
+    # default run
     names = (args.only.split(",") if args.only
              else [n for n in BENCHES
-                   if n not in ("engine", "sweep", "one_exec")
+                   if n not in ("engine", "sweep", "one_exec",
+                                "telemetry")
                    and n not in FIGS])
     print("name,us_per_call,derived")
     for name in names:

@@ -24,6 +24,7 @@ import numpy as np
 from repro import configs
 from repro.models import LM
 from repro.launch import steps as steps_mod
+from repro.obs import metrics as obs_metrics
 from repro.sched import scheduler
 
 
@@ -56,23 +57,41 @@ def main() -> None:
     tokens = jax.random.randint(key, (n_req, 1), 0, cfg.vocab)
     pending = np.ones(n_req, bool)
     served = 0
+    # obs-layer accounting: per-request commit latency in ticks (shared
+    # log-spaced bins), abort causes, per-tick conflict-degree stats
+    lat_hist = obs_metrics.HostHist()
+    abort_causes = {c: 0 for c in obs_metrics.ABORT_CAUSES}
     for tick in range(args.ticks):
         if not pending.any():
             break
         res = scheduler.tick(reads, writes, jnp.array(pending),
                              policy=args.policy)
+        stats = scheduler.tick_stats(reads, writes, jnp.array(pending),
+                                     res)
         admitted = np.asarray(res.admitted)
         if admitted.any():
             logits, caches = serve(params, caches, tokens,
                                    jnp.int32(tick))
             tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(int(admitted.sum())):
+            lat_hist.add(tick + 1)        # commit latency in ticks
+        # occ is the only tick policy that aborts (validation failure
+        # at admission = the engine's read-phase validation cause)
+        abort_causes["validate_read"] += stats["aborted"]
         served += int(admitted.sum())
         pending &= ~admitted
-        print(f"tick {tick}: admitted={int(admitted.sum()):3d} "
-              f"aborted={int(res.aborted.sum()):3d} "
-              f"pending={int(pending.sum()):3d}")
+        print(f"tick {tick}: admitted={stats['admitted']:3d} "
+              f"aborted={stats['aborted']:3d} "
+              f"pending={int(pending.sum()):3d} "
+              f"conflict degree max={stats['degree_max']} "
+              f"mean={stats['degree_mean']:.1f}")
+    pct = lat_hist.percentiles()
+    causes = {c: v for c, v in abort_causes.items() if v}
     print(f"policy={args.policy} served={served}/{n_req} "
           f"in {tick + 1} ticks")
+    print(f"commit latency (ticks): p50={pct['p50']:.1f} "
+          f"p99={pct['p99']:.1f} over {lat_hist.count} commits; "
+          f"abort causes: {causes or 'none'}")
 
 
 if __name__ == "__main__":

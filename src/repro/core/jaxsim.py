@@ -71,6 +71,7 @@ import jax.numpy as jnp
 
 from . import bitset as B
 from . import ppcc as P
+from ..obs import metrics as M
 from .types import SimParams, SimResult
 
 INF = jnp.float32(1e30)
@@ -151,6 +152,9 @@ class EngState(NamedTuple):
                                  # EngCfg.delta (else (0,0) placeholders);
                                  # invariant: equals compute_relations of
                                  # pstate + this iteration's op cursor
+    tm: M.Telemetry              # telemetry accumulators when
+                                 # EngCfg.telemetry (else 0-size
+                                 # placeholders, same pytree structure)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +208,13 @@ class EngCfg:
                                  # recompute past it, a fleet step loops
                                  # K-sized chunks until the dirty set is
                                  # drained
+    telemetry: bool = False      # carry obs.metrics accumulators in the
+                                 # loop state (DESIGN.md §8); off keeps
+                                 # 0-size placeholder leaves so results
+                                 # and compiled code are bit-identical
+    trace_every: int = 0         # >0: sample the time-series ring
+                                 # buffer every this many iterations
+    trace_len: int = 256         # ring-buffer rows (static shape)
 
 
 def _cfg(p: SimParams, max_iters: int) -> EngCfg:
@@ -681,13 +692,16 @@ def _reserve_cohort(cpu_free: jax.Array, disk_free: jax.Array,
 
 def _try_ops_cohort(cfg: EngCfg, ps: P.PPCCState, item: jax.Array,
                     is_write: jax.Array, ready: jax.Array
-                    ) -> Tuple[P.PPCCState, jax.Array, jax.Array]:
+                    ) -> Tuple[P.PPCCState, jax.Array, jax.Array,
+                               jax.Array]:
     """Batched read-phase protocol step over a cohort of pending ops.
 
     Selects a pairwise-independent subset of ``ready`` (protocol
     dependent), resolves it in one vectorized step, and returns
-    (state, verdict[n], selected[n]).  Deferred (ready & ~selected)
-    slots are retried next iteration.
+    (state, verdict[n], selected[n], block-reason[n]).  Deferred
+    (ready & ~selected) slots are retried next iteration.  Reason codes
+    are ``ppcc.R_LOCK`` / ``ppcc.R_RULE`` on BLOCK lanes (every 2PL
+    block is a lock wait; OCC never blocks).
     """
     n = ps.n
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -709,14 +723,15 @@ def _try_ops_cohort(cfg: EngCfg, ps: P.PPCCState, item: jax.Array,
             read_set=B.or_rowwise(ps.read_set, item, ok & ~is_write),
             write_set=B.or_rowwise(ps.write_set, item, ok & is_write))
         verdict = jnp.where(ok, P.PROCEED, P.BLOCK).astype(jnp.int32)
-        return ps2, verdict, sel
+        reason = jnp.where(sel & ~ok, P.R_LOCK, P.R_NONE).astype(jnp.int32)
+        return ps2, verdict, sel, reason
     # occ: ops never read other slots' protocol state — all independent
     sel = ready
     ps2 = ps._replace(
         read_set=B.or_rowwise(ps.read_set, item, sel & ~is_write),
         write_set=B.or_rowwise(ps.write_set, item, sel & is_write))
     verdict = jnp.full(n, P.PROCEED, jnp.int32)
-    return ps2, verdict, sel
+    return ps2, verdict, sel, jnp.zeros(n, jnp.int32)
 
 
 def _wc_cohort(cfg: EngCfg, ps: P.PPCCState, dirty: jax.Array,
@@ -865,14 +880,17 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
         fs = P.cohort_step_fused(s.pstate, cur_item, cur_w, read_m, wc_m,
                                  order=cfg.order, relations=rel)
         ps1 = ps2 = fs.state
-        verdict, sel = fs.verdict, fs.selected
+        verdict, sel, reason = fs.verdict, fs.selected, fs.reason
+        degree = fs.degree
         flush_m = wc_m & fs.won & fs.can_commit
         wait_prec_m = wc_m & fs.won & ~fs.can_commit
         wait_lock_m = wc_m & ~fs.won
         wc_abort = jnp.zeros(n, bool)
     else:
-        ps1, verdict, sel = _try_ops_cohort(cfg, s.pstate, cur_item,
-                                            cur_w, read_m)
+        ps1, verdict, sel, reason = _try_ops_cohort(cfg, s.pstate,
+                                                    cur_item, cur_w,
+                                                    read_m)
+        degree = jnp.zeros(n, jnp.int32)
         # The lax.cond gates in this body are pure perf guards: each
         # branch is exact under an all-False mask.  Under vmap (fleet
         # lanes) a cond decays into computing BOTH branches plus a
@@ -1084,16 +1102,97 @@ def _cohort_body(cfg: EngCfg, s: EngState) -> EngState:
     else:
         rel_c = s.rel
 
-    new_blocks = (v_block & ~was_blocked).sum()
+    new_block = v_block & ~was_blocked
+
+    # ---------------- telemetry (compiled out when cfg.telemetry off) --
+    if cfg.telemetry:
+        tm = s.tm
+        edges = jnp.asarray(M.EDGES, jnp.float32)
+        # Wait-episode state machine: open on block / wc-lock-wait /
+        # wc-prec-wait entry (wait_from INF = no open episode), close —
+        # folding the span into wait_acc — the quantum the slot is
+        # processed while its post-phase is no longer a waiting state.
+        # PH_WC_LOCK -> PH_WC_PREC keeps the episode open (one wait).
+        entering = (v_block | wait_lock_m | wait_prec_m) & \
+            (tm.wait_from > 0.5 * INF)
+        wfrom = jnp.where(entering, te, tm.wait_from)
+        exiting = ready & (wfrom < 0.5 * INF) & ~waiting
+        wacc = jnp.where(exiting, tm.wait_acc + (te - wfrom), tm.wait_acc)
+        wfrom = jnp.where(exiting, INF, wfrom)
+
+        # commit folds: non-commit lanes scatter to the one-past-the-end
+        # bin and are dropped, so the hists only ever count commits
+        lat_idx = jnp.where(
+            commit_now,
+            jnp.searchsorted(edges, te - tm.first_start, side="right"),
+            M.NBINS).astype(jnp.int32)
+        wait_idx = jnp.where(
+            commit_now, jnp.searchsorted(edges, wacc, side="right"),
+            M.NBINS).astype(jnp.int32)
+        r_idx = jnp.where(commit_now,
+                          jnp.minimum(tm.restarts, M.RBINS - 1),
+                          M.RBINS).astype(jnp.int32)
+        lat_hist = tm.lat_hist.at[lat_idx].add(1, mode="drop")
+        wait_hist = tm.wait_hist.at[wait_idx].add(1, mode="drop")
+        restart_hist = tm.restart_hist.at[r_idx].add(1, mode="drop")
+        first_start = jnp.where(commit_now, te, tm.first_start)
+        wacc = jnp.where(commit_now, jnp.float32(0), wacc)
+        restarts = jnp.where(commit_now, 0,
+                             tm.restarts + abort_now.astype(jnp.int32))
+
+        # abort causes: priority-masked partition — each aborting slot
+        # is charged to exactly one cause, so causes sum to aborts even
+        # if the underlying masks ever overlapped
+        rest = abort_now
+        cause_counts = []
+        for cm in (to_expired & was_blocked, to_expired & ~was_blocked,
+                   v_abort, wc_abort, occ_fail):
+            take = rest & cm
+            cause_counts.append(take.sum())
+            rest = rest & ~cm
+        abort_causes = tm.abort_causes + jnp.stack(cause_counts)
+        # lock + rule partition the engine's `blocks` counter; wc-lock
+        # wait entries are a separate episode class
+        block_causes = tm.block_causes + jnp.stack([
+            (new_block & (reason == P.R_LOCK)).sum(),
+            (new_block & (reason == P.R_RULE)).sum(),
+            (wait_lock_m & first_lock).sum()])
+
+        trace = tm.trace
+        if cfg.trace_every > 0:
+            # ring-buffer sample every trace_every iterations: a
+            # read-modify-write dynamic slice (vmap-safe, no cond)
+            it1 = s.iters - 1
+            do = (it1 % cfg.trace_every) == 0
+            pos = (it1 // cfg.trace_every) % cfg.trace_len
+            row = jnp.stack([
+                t0,
+                ready.sum().astype(jnp.float32),
+                (ph == PH_BLOCKED).sum().astype(jnp.float32),
+                waiting.sum().astype(jnp.float32),
+                (s.commits + commit_now.sum()).astype(jnp.float32),
+                (s.aborts + abort_now.sum()).astype(jnp.float32),
+                sel.sum().astype(jnp.float32),
+                jnp.where(read_m, degree, 0).sum().astype(jnp.float32)])
+            old = jax.lax.dynamic_slice(trace, (pos, 0),
+                                        (1, row.shape[0]))
+            new = jnp.where(do, row[None, :], old)
+            trace = jax.lax.dynamic_update_slice(trace, new, (pos, 0))
+        tm = M.Telemetry(first_start, wfrom, wacc, restarts, lat_hist,
+                         wait_hist, restart_hist, abort_causes,
+                         block_causes, trace)
+    else:
+        tm = s.tm
+
     return s._replace(
         pstate=ps5, dirty=dirty, kinds=new_kinds, items=new_items, rel=rel_c,
         op_idx=op_new, phase=ph, next_time=nt, next_kind=nk, deadline=dl,
         flush_left=fl, cpu_free=cpu_free, disk_free=disk_free,
         commits=s.commits + commit_now.sum(),
         aborts=s.aborts + abort_now.sum(),
-        blocks=s.blocks + new_blocks,
+        blocks=s.blocks + new_block.sum(),
         ops_done=s.ops_done + proceed.sum(),
-        pool_next=pool_next)
+        pool_next=pool_next, tm=tm)
 
 
 def default_cohort_dt(p: SimParams) -> float:
@@ -1123,7 +1222,8 @@ def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
                        cohort_dt: float = None, fleet: bool = False,
                        pool: int = 0, fused: bool = True,
                        order: str = "index", delta: bool = False,
-                       delta_k: int = 0):
+                       delta_k: int = 0, telemetry: bool = False,
+                       trace_every: int = 0, trace_len: int = 256):
     """An engine whose MPL is a RUNTIME parameter (DESIGN.md §2.4).
 
     The slot axis is padded to the static bucket ``n_slots``; the
@@ -1141,7 +1241,9 @@ def make_padded_engine(p: SimParams, protocol: str, n_slots: int,
                                     cohort_dt=cohort_dt, n_slots=n_slots,
                                     fleet=fleet, pool=pool, fused=fused,
                                     order=order, delta=delta,
-                                    delta_k=delta_k)
+                                    delta_k=delta_k, telemetry=telemetry,
+                                    trace_every=trace_every,
+                                    trace_len=trace_len)
 
     @jax.jit
     def _run(seed: jax.Array, mpl: jax.Array, rt: RtParams) -> EngState:
@@ -1190,7 +1292,8 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
                  n_slots: int = None, fleet: bool = False, pool: int = 0,
                  fused: bool = True, order: str = "index",
                  megakernel: bool = None, delta: bool = False,
-                 delta_k: int = 0):
+                 delta_k: int = 0, telemetry: bool = False,
+                 trace_every: int = 0, trace_len: int = 256):
     """(init, cond, step) for single-stepping an engine from tests —
     e.g. checking protocol invariants after every cohort step.
 
@@ -1203,6 +1306,8 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
     loop would be pure overhead)."""
     if step_mode not in ("cohort", "event"):
         raise ValueError(f"unknown step_mode: {step_mode!r}")
+    if telemetry and step_mode != "cohort":
+        raise ValueError("telemetry requires step_mode='cohort'")
     if megakernel is None:
         megakernel = jax.default_backend() in ("tpu", "gpu")
     if cohort_dt is None:
@@ -1222,7 +1327,10 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
                               cohort_dt=float(cohort_dt), n=n_slots,
                               fleet=fleet, pool=pool, fused=fused,
                               order=order, megakernel=megakernel,
-                              delta=carry_rel, delta_k=delta_k)
+                              delta=carry_rel, delta_k=delta_k,
+                              telemetry=telemetry,
+                              trace_every=trace_every,
+                              trace_len=trace_len)
 
     def init(seed, mpl=None, rt: RtParams = None) -> EngState:
         if mpl is None:
@@ -1261,7 +1369,11 @@ def engine_parts(p: SimParams, protocol: str, max_iters: int = 400_000,
             iters=jnp.int32(0),
             pool_kinds=pool_kinds, pool_items=pool_items,
             pool_next=jnp.int32(0), rt=rt,
-            rel=P.empty_relations(cfg.n if cfg.delta else 0))
+            rel=P.empty_relations(cfg.n if cfg.delta else 0),
+            tm=M.init_telemetry(
+                cfg.n if cfg.telemetry else 0,
+                cfg.trace_len if (cfg.telemetry and cfg.trace_every > 0)
+                else 0))
         # begin only the first `mpl` slots; the rest stay PH_OFF/INF so
         # every cohort mask derived from `ready` leaves them inert
         s = jax.lax.fori_loop(

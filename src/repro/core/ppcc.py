@@ -41,6 +41,11 @@ from . import bitset as B
 # verdicts
 PROCEED, BLOCK, ABORT = 0, 1, 2
 
+# block-reason codes attached to BLOCK verdicts (telemetry taxonomy):
+# the op hit a wait-to-commit lock (R_LOCK) vs the Prudent Precedence
+# Rule refused the precedence (R_RULE).  R_NONE on non-BLOCK lanes.
+R_NONE, R_LOCK, R_RULE = 0, 1, 2
+
 
 class PPCCState(NamedTuple):
     """Protocol state for n transaction slots over d items.
@@ -418,6 +423,9 @@ def _try_ops(s, item, is_write, mask, writers_at, readers_at):
     verdict = jnp.where(lock_v != PROCEED, lock_v,
                         jnp.where(allowed, PROCEED, BLOCK))
     verdict = jnp.where(mask, verdict, BLOCK).astype(jnp.int32)
+    reason = jnp.where(mask & (verdict == BLOCK),
+                       jnp.where(locked_by_other, R_LOCK, R_RULE),
+                       R_NONE).astype(jnp.int32)
 
     ok_r = allowed & ~is_write
     ok_w = allowed & is_write
@@ -429,7 +437,7 @@ def _try_ops(s, item, is_write, mask, writers_at, readers_at):
         prec=s.prec | add_r | add_w.T,
         preceding=s.preceding | (ok_r & any_new_r) | add_w.any(axis=0),
         preceded=s.preceded | (ok_w & any_new_w) | add_r.any(axis=0),
-    ), verdict
+    ), verdict, reason
 
 
 def try_ops_batched(s: PPCCState, item: jax.Array, is_write: jax.Array,
@@ -442,19 +450,23 @@ def try_ops_batched(s: PPCCState, item: jax.Array, is_write: jax.Array,
     inert and report BLOCK.  Returns (state, verdict int32[n]).
     """
     writers_at, readers_at = _op_tables(s, item)
-    return _try_ops(s, item, is_write, mask, writers_at, readers_at)
+    s2, verdict, _ = _try_ops(s, item, is_write, mask, writers_at,
+                              readers_at)
+    return s2, verdict
 
 
 def cohort_step(s: PPCCState, item: jax.Array, is_write: jax.Array,
                 ready: jax.Array
-                ) -> Tuple[PPCCState, jax.Array, jax.Array]:
+                ) -> Tuple[PPCCState, jax.Array, jax.Array, jax.Array]:
     """``cohort_select`` + ``try_ops_batched`` sharing one set of
-    gathers (the engine hot path).  Returns (state, verdict, selected).
+    gathers (the engine hot path).  Returns (state, verdict, selected,
+    block-reason codes — ``R_LOCK``/``R_RULE`` on BLOCK lanes).
     """
     writers_at, readers_at = _op_tables(s, item)
     sel = _select(s, item, is_write, ready, writers_at, readers_at)
-    s2, verdict = _try_ops(s, item, is_write, sel, writers_at, readers_at)
-    return s2, verdict, sel
+    s2, verdict, reason = _try_ops(s, item, is_write, sel, writers_at,
+                                   readers_at)
+    return s2, verdict, sel, reason
 
 
 class FusedStep(NamedTuple):
@@ -466,6 +478,7 @@ class FusedStep(NamedTuple):
     degree: jax.Array        # int32[n] conflict degree among ready ops
     won: jax.Array           # bool[n]  wait-to-commit lock winners
     can_commit: jax.Array    # bool[n]  Fig. 4 test on the post-ops state
+    reason: jax.Array        # int32[n] block-reason codes (R_LOCK/R_RULE)
 
 
 def cohort_step_fused(s: PPCCState, item: jax.Array, is_write: jax.Array,
@@ -521,7 +534,8 @@ def cohort_step_fused(s: PPCCState, item: jax.Array, is_write: jax.Array,
         raise ValueError(f"unknown selection order: {order!r}")
     before = key[None, :] < key[:, None]
     sel = ready & ~(dep & ready[None, :] & before).any(axis=1)
-    s2, verdict = _try_ops(s, item, is_write, sel, writers_at, readers_at)
+    s2, verdict, reason = _try_ops(s, item, is_write, sel, writers_at,
+                                   readers_at)
 
     feasible = wc_mask & ~lockhit
     if exact_wc:
@@ -534,7 +548,8 @@ def cohort_step_fused(s: PPCCState, item: jax.Array, is_write: jax.Array,
         lower = idx[None, :] < idx[:, None]
         won = feasible & ~(ww & feasible[None, :] & lower).any(axis=1)
     s3 = s2._replace(haslocks=s2.haslocks | won)
-    return FusedStep(s3, verdict, sel, deg, won, can_commit_many(s3))
+    return FusedStep(s3, verdict, sel, deg, won, can_commit_many(s3),
+                     reason)
 
 
 # --------------------------------------------------------------------------

@@ -38,6 +38,7 @@ import numpy as np
 
 from .types import Op, OpKind, SimParams, SimResult
 from . import workload
+from ..obs import metrics as obs_metrics
 
 PROCEED, BLOCK, ABORT = "proceed", "block", "abort"
 
@@ -50,13 +51,14 @@ class Txn:
         "slot", "ops", "ip", "read_set", "write_set", "state", "epoch",
         "block_epoch", "first_start", "start_ts", "preceding", "preceded",
         "pred", "succ", "flush_left", "restarts", "block_started",
-        "inc_id", "timeout_block_epoch",
+        "inc_id", "timeout_block_epoch", "wait_acc",
     )
 
     def __init__(self, slot: int, ops: List[Op], now: float):
         self.slot = slot
         self.ops = ops
         self.restarts = 0
+        self.wait_acc = 0.0        # accumulated wait, persists restarts
         self.first_start = now
         self.epoch = 0
         self.reset(now)
@@ -177,12 +179,14 @@ class PPCC(Protocol):
         if owner is not None and owner is not t:
             if owner in t.succ:          # t precedes the lock holder
                 return ABORT             # avoid circular wait (paper Fig. 3)
+            self.e._block_reason = "lock"
             return BLOCK                 # blocked until unlocked
         if op.kind == OpKind.READ:
             ws = self.writers.get(x)
             new_writers = [j for j in (ws or ()) if j is not t and j not in t.succ]
             if new_writers:
                 # Prudent Precedence Rule: t (reader) precedes each writer.
+                self.e._block_reason = "rule"
                 if t.preceded:
                     return BLOCK         # (i) a preceded txn cannot precede
                 if any(j.preceding for j in new_writers):
@@ -197,6 +201,7 @@ class PPCC(Protocol):
             new_readers = [j for j in (rs or ()) if j is not t and j not in t.pred]
             if new_readers:
                 # each reader j precedes t (writer)
+                self.e._block_reason = "rule"
                 if t.preceding:
                     return BLOCK
                 if any(j.preceded for j in new_readers):
@@ -291,6 +296,7 @@ class TwoPL(Protocol):
 
     def try_op(self, t: Txn, op: Op) -> str:
         x = op.item
+        self.e._block_reason = "lock"     # every 2PL block is a lock wait
         xh = self.x_holder.get(x)
         if op.kind == OpKind.READ:
             if xh is not None and xh is not t:
@@ -408,6 +414,16 @@ class Engine:
         self.blocked: deque = deque()     # rule/lock blocked read-phase txns
         self._in_retry = False
         self._retry_again = False
+        # telemetry mirror of the compiled engine's obs layer: raw
+        # per-commit samples (binned via obs.metrics in ``simulate``)
+        # plus the abort/block cause taxonomies.  Pure accounting — no
+        # RNG draws, so event order and results are unchanged.
+        self.latencies: List[float] = []
+        self.waits: List[float] = []
+        self.restart_counts: List[int] = []
+        self.abort_causes = {c: 0 for c in obs_metrics.ABORT_CAUSES}
+        self.block_causes = {c: 0 for c in obs_metrics.BLOCK_CAUSES}
+        self._block_reason = "lock"       # set by Protocol.try_op on BLOCK
         self.record_history = record_history
         # committed-history log of
         # (txn_slot, incarnation_id, kind, item, time, causal_seq)
@@ -481,7 +497,7 @@ class Engine:
         elif verdict == BLOCK:
             self._block(t)
         else:
-            self._abort(t)
+            self._abort(t, "precedence")
 
     def _ev_disk(self, t: Txn) -> None:
         self.disk.release(self)
@@ -492,6 +508,7 @@ class Engine:
         t.block_epoch += 1
         t.block_started = self.now
         self.res.blocks += 1
+        self.block_causes[self._block_reason] += 1
         self.blocked.append(t)
         self.schedule(self.now + self.p.block_timeout, "timeout", t)
         t.timeout_block_epoch = t.block_epoch  # type: ignore[attr-defined]
@@ -499,7 +516,8 @@ class Engine:
     def _ev_timeout(self, t: Txn) -> None:
         if t.state in ("blocked", "wc_lock_wait") and \
                 getattr(t, "timeout_block_epoch", -1) == t.block_epoch:
-            self._abort(t)
+            self._abort(t, "block_timeout" if t.state == "blocked"
+                        else "wc_timeout")
 
     def retry_blocked(self) -> None:
         """Re-attempt every rule/lock-blocked read-phase transaction.
@@ -529,6 +547,7 @@ class Engine:
             op = t.cur_op
             verdict = self.proto.try_op(t, op)
             if verdict == PROCEED:
+                t.wait_acc += self.now - t.block_started
                 t.state = "read"
                 t.block_epoch += 1        # invalidate the pending timeout
                 self.res.ops_executed += 1
@@ -547,7 +566,7 @@ class Engine:
             elif verdict == BLOCK:
                 self.blocked.append(t)    # keep original timeout running
             else:
-                self._abort(t)
+                self._abort(t, "precedence")
 
     # -- read phase end / commit ---------------------------------------------
     def _read_phase_done(self, t: Txn) -> None:
@@ -556,16 +575,19 @@ class Engine:
         if outcome == "flush":
             self.start_flush(t)
         elif outcome == "validate_fail":
-            self._abort(t)
+            self._abort(t, "validate_read")
         elif outcome == "wait":
             t.block_epoch += 1
             t.block_started = self.now
             if t.state == "wc_lock_wait":
+                self.block_causes["wc_lock"] += 1
                 self.schedule(self.now + self.p.block_timeout, "timeout", t)
                 t.timeout_block_epoch = t.block_epoch  # type: ignore[attr-defined]
         # "wait": parked by the protocol; woken via protocol wake hooks
 
     def start_flush(self, t: Txn) -> None:
+        if t.state in ("wc_lock_wait", "wc_prec_wait"):
+            t.wait_acc += self.now - t.block_started
         t.state = "flush"
         t.block_epoch += 1
         t.flush_left = len(t.write_set)
@@ -588,6 +610,9 @@ class Engine:
         t.state = "committed"
         self.res.commits += 1
         self.res.sum_response_time += self.now - t.first_start
+        self.latencies.append(self.now - t.first_start)
+        self.waits.append(t.wait_acc)
+        self.restart_counts.append(t.restarts)
         if self.record_history:
             for inc_id, kind, item, ts, seq in self._staged.pop(t.slot, []):
                 # reads at read time; writes become visible at commit time
@@ -604,9 +629,13 @@ class Engine:
         t.reset(self.now)
         t.first_start = self.now
         t.restarts = 0
+        t.wait_acc = 0.0
         self._begin(t)
 
-    def _abort(self, t: Txn) -> None:
+    def _abort(self, t: Txn, cause: str) -> None:
+        if t.state in ("blocked", "wc_lock_wait", "wc_prec_wait"):
+            t.wait_acc += self.now - t.block_started
+        self.abort_causes[cause] += 1
         t.state = "aborted"
         self.res.aborts += 1
         if self.record_history:
@@ -630,6 +659,25 @@ def simulate(params: SimParams, protocol: str,
     res = eng.run()
     if record_history:
         res.history = eng.history  # type: ignore[attr-defined]
+
+    def hist(vals, nbins):
+        return np.bincount(obs_metrics.value_bin(np.asarray(vals)),
+                           minlength=nbins)[:nbins] if len(vals) \
+            else np.zeros(nbins, np.int64)
+
+    res.telemetry = {
+        "latencies": eng.latencies,
+        "waits": eng.waits,
+        "restart_counts": eng.restart_counts,
+        "lat_hist": hist(eng.latencies, obs_metrics.NBINS),
+        "wait_hist": hist(eng.waits, obs_metrics.NBINS),
+        "restart_hist": np.bincount(
+            np.minimum(eng.restart_counts, obs_metrics.RBINS - 1),
+            minlength=obs_metrics.RBINS)[:obs_metrics.RBINS]
+        if eng.restart_counts else np.zeros(obs_metrics.RBINS, np.int64),
+        "abort_causes": dict(eng.abort_causes),
+        "block_causes": dict(eng.block_causes),
+    }
     return res
 
 

@@ -131,7 +131,8 @@ class Fleet:
                  cohort_dt: Optional[float] = None, mesh=None,
                  pool: Optional[int] = None, fused: bool = True,
                  order: str = "index", delta: bool = False,
-                 delta_k: int = 0):
+                 delta_k: int = 0, telemetry: bool = False,
+                 trace_every: int = 0, trace_len: int = 256):
         if n_slots is None:
             n_slots = slot_bucket(p.mpl)
         if pool is None:
@@ -144,12 +145,15 @@ class Fleet:
         self.protocols = tuple(protocols)
         self.n_slots = n_slots
         self.mesh = mesh
+        self.telemetry = telemetry
         self.traces = 0
         parts = {
             proto: jaxsim.engine_parts(
                 p, proto, max_iters=max_iters, cohort_dt=cohort_dt,
                 n_slots=n_slots, fleet=True, pool=pool, fused=fused,
-                order=order, delta=delta, delta_k=delta_k)
+                order=order, delta=delta, delta_k=delta_k,
+                telemetry=telemetry, trace_every=trace_every,
+                trace_len=trace_len)
             for proto in self.protocols
         }
 
@@ -180,6 +184,17 @@ class Fleet:
                 fin = runners[proto](seed_l, mpl_l, rt_l)
                 res = {k: getattr(fin, k) for k in METRICS}
                 res["now"] = fin.now
+                if self.telemetry:
+                    # per-lane accumulator blocks (leading lane axis) —
+                    # hosts aggregate with obs.metrics.summarize
+                    res["telemetry"] = {
+                        "lat_hist": fin.tm.lat_hist,
+                        "wait_hist": fin.tm.wait_hist,
+                        "restart_hist": fin.tm.restart_hist,
+                        "abort_causes": fin.tm.abort_causes,
+                        "block_causes": fin.tm.block_causes,
+                        "trace": fin.tm.trace,
+                    }
                 out[proto] = res
             return out
 
@@ -208,14 +223,19 @@ class Fleet:
         rt = jaxsim.rt_of(self.params)
         rts = jax.tree.map(lambda x: jnp.broadcast_to(x, (m * s,)), rt)
         flat = self.run_lanes(np.tile(seeds, m), np.repeat(mpls, s), rts)
-        return {proto: {k: v.reshape(m, s) for k, v in res.items()}
-                for proto, res in flat.items()}
+        # telemetry blocks carry trailing accumulator axes — fold only
+        # the leading lane axis to (m, s)
+        return {proto: jax.tree.map(
+            lambda v: v.reshape((m, s) + v.shape[1:]), res)
+            for proto, res in flat.items()}
 
 
 def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
               horizon: float, protocols: Sequence[str] = PROTOCOLS,
               n_slots: Optional[int] = None, max_iters: int = 400_000,
               shard: bool = True, fused: bool = True, delta: bool = False,
+              telemetry: bool = False, trace_every: int = 0,
+              trace_len: int = 256,
               ) -> Tuple[Dict[str, Dict[str, np.ndarray]], Fleet]:
     """Run one paper figure's full grid as a single compiled call.
 
@@ -229,7 +249,9 @@ def run_fleet(fig: int, mpl_grid: Sequence[int], seeds: Sequence[int],
     n_lanes = len(mpl_grid) * len(seeds)
     mesh = fleet_mesh(n_lanes) if shard else None
     fleet = Fleet(p, protocols=protocols, n_slots=n_slots,
-                  max_iters=max_iters, mesh=mesh, fused=fused, delta=delta)
+                  max_iters=max_iters, mesh=mesh, fused=fused, delta=delta,
+                  telemetry=telemetry, trace_every=trace_every,
+                  trace_len=trace_len)
     out = fleet(list(mpl_grid), list(seeds))
     host = jax.tree.map(np.asarray, out)
     return host, fleet
@@ -257,7 +279,8 @@ def run_grid(figs: Sequence[int] = GRID_FIGS,
              protocols: Sequence[str] = PROTOCOLS,
              n_slots: Optional[int] = None, max_iters: int = 400_000,
              shard: bool = True, fused: bool = True, delta: bool = False,
-             fleet: Optional[Fleet] = None,
+             fleet: Optional[Fleet] = None, telemetry: bool = False,
+             trace_every: int = 0, trace_len: int = 256,
              ) -> Tuple[Dict[int, Dict[str, Dict[str, np.ndarray]]],
                         Fleet]:
     """EVERY paper figure's grid in one compiled fleet launch.
@@ -280,13 +303,20 @@ def run_grid(figs: Sequence[int] = GRID_FIGS,
         mesh = fleet_mesh(n_lanes) if shard else None
         fleet = Fleet(cover, protocols=protocols, n_slots=n_slots,
                       max_iters=max_iters, mesh=mesh, fused=fused,
-                      delta=delta)
+                      delta=delta, telemetry=telemetry,
+                      trace_every=trace_every, trace_len=trace_len)
     seed_l, mpl_l, rt_l = grid_lanes(figs, mpl_grid, seeds)
     flat = fleet.run_lanes(seed_l, mpl_l, rt_l)
     shape = (len(figs), len(mpl_grid), len(seeds))
+
+    def fold(v, i):
+        # fold the flat lane axis to [F, M, S] and take figure i; the
+        # telemetry blocks keep their trailing accumulator axes
+        a = np.asarray(v)
+        return a.reshape(shape + a.shape[1:])[i]
+
     out = {
-        fig: {proto: {k: np.asarray(v).reshape(shape)[i]
-                      for k, v in res.items()}
+        fig: {proto: jax.tree.map(lambda v, i=i: fold(v, i), res)
               for proto, res in flat.items()}
         for i, fig in enumerate(figs)
     }

@@ -1,0 +1,9 @@
+"""Observability layer (DESIGN.md §8).
+
+``metrics`` — fixed-shape in-loop accumulator definitions (latency /
+wait / restart histograms, the abort- and block-cause taxonomies) plus
+the host-side reductions that turn them into percentiles and cause
+breakdowns.  ``trace`` — Chrome-trace/Perfetto export of the engine's
+time-series ring buffer.
+"""
+from . import metrics, trace  # noqa: F401

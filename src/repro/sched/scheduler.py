@@ -38,6 +38,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import bitset, ppcc
 from ..kernels import ops as kops
@@ -259,6 +260,33 @@ def occ_tick(read_sets: jax.Array, write_sets: jax.Array,
 
 
 POLICIES = {"ppcc": ppcc_tick, "2pl": twopl_tick, "occ": occ_tick}
+
+
+def tick_stats(read_sets: jax.Array, write_sets: jax.Array,
+               valid: jax.Array, result: TickResult,
+               use_kernel: bool = True, words: int = None) -> dict:
+    """Host-side per-tick telemetry: admitted/aborted/pending counts
+    plus conflict-degree stats over the valid batch (max / mean rows of
+    the symmetric conflict relation ``raw | raw^T | ww``).  Pure
+    observation — reads the tick inputs and result, mutates nothing."""
+    rb = _as_bits(read_sets, words)
+    wb = _as_bits(write_sets, words)
+    raw, ww, *_ = _conflict_matrices(rb, wb, use_kernel)
+    n = rb.shape[0]
+    conflict = (raw | raw.T | ww) & ~jnp.eye(n, dtype=bool)
+    conflict = conflict & valid[None, :] & valid[:, None]
+    deg = np.asarray(conflict.sum(axis=1))[np.asarray(valid)]
+    admitted = int(np.asarray(result.admitted).sum())
+    aborted = int(np.asarray(result.aborted).sum())
+    n_valid = int(np.asarray(valid).sum())
+    return {
+        "valid": n_valid,
+        "admitted": admitted,
+        "aborted": aborted,
+        "pending": n_valid - admitted - aborted,
+        "degree_max": int(deg.max()) if deg.size else 0,
+        "degree_mean": float(deg.mean()) if deg.size else 0.0,
+    }
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "order", "words",
